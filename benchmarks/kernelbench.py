@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: the paper's per-chare hot loop.
+
+The Pallas kernels target TPU; on this CPU container they execute through
+the interpreter (correctness only), so the numbers that are *measured* here
+are the jit'd pure-jnp reference pipeline (what the engine actually runs on
+CPU), plus the kernels' analytic TPU cost model (MXU one-hot matmul flops /
+VMEM traffic) for the roofline narrative.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.push_sum import BLOCK_E, BLOCK_S, BLOCK_V
+
+
+def bench_ref(E=1 << 16, V=1 << 14, repeats=5, seed=0):
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    valid = jnp.ones((E,), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=V), jnp.float32)
+
+    fn = jax.jit(lambda: ref.push_ref(vals, src, dst, valid, V))
+    fn().block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best, E
+
+
+def kernel_cost_model(E=1 << 16, V=1 << 14):
+    """Analytic TPU cost of the one-hot-matmul push kernel (per call)."""
+    ne, nv, ns = -(-E // BLOCK_E), -(-V // BLOCK_V), -(-V // BLOCK_S)
+    # gather: grid ne*nv matmuls [BE,BV]x[BV]; scatter: ns*ne [BE,BS]^T x [BE]
+    flops = ne * nv * 2 * BLOCK_E * BLOCK_V + ns * ne * 2 * BLOCK_E * BLOCK_S
+    hbm = (E * 4 * 3 + V * 4 * 2) * 2  # indices+values in, out, both halves
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "mxu_s": flops / 197e12,
+        "hbm_s": hbm / 819e9,
+        "bound": "memory" if hbm / 819e9 > flops / 197e12 else "compute",
+    }
+
+
+def validate(E=4096, V=2048, seed=1):
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, V, E), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, E), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=V), jnp.float32)
+    got = ops.push(vals, src, dst, valid, V, combine="add")
+    want = ref.push_ref(vals, src, dst, valid, V, combine="add")
+    return float(jnp.max(jnp.abs(got - want)))

@@ -1,0 +1,62 @@
+"""Roofline table assembly: reads the dry-run records (experiments/dryrun/)
+and emits the EXPERIMENTS.md section-Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = ("mesh", "arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "useful", "mem_gb_dev", "compile_s")
+
+
+def load_records(dirname="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def row(rec):
+    if rec.get("status", "run") != "run":
+        return (rec["mesh"], rec["arch"], rec["shape"], "-", "-", "-",
+                "skip", "-", "-", "-")
+    rl = rec["roofline"]
+    m = rec["memory"]
+    mem_gb = ((m["argument_bytes"] or 0) + (m["temp_bytes"] or 0)
+              + (m["output_bytes"] or 0) - (m["alias_bytes"] or 0)) / 1e9
+    u = rec.get("useful_flop_ratio")
+    return (rec["mesh"], rec["arch"], rec["shape"],
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}", rl["bottleneck"],
+            f"{u:.3f}" if u else "-", f"{mem_gb:.1f}",
+            f"{rec['compile_s']:.0f}")
+
+
+def as_markdown(recs):
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "---|" * len(HEADERS)]
+    order = {"pod16x16": 0, "pod2x16x16": 1}
+    for rec in sorted(recs, key=lambda r: (order.get(r["mesh"], 9),
+                                           r["arch"], r["shape"])):
+        lines.append("| " + " | ".join(str(x) for x in row(rec)) + " |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    """Aggregate stats for run.py CSV output."""
+    run = [r for r in recs if r.get("status") == "run"]
+    if not run:
+        return {}
+    worst = min(run, key=lambda r: r.get("useful_flop_ratio") or 1)
+    coll = max(run, key=lambda r: r["roofline"]["collective_s"]
+               / max(sum(r["roofline"][k] for k in
+                         ("compute_s", "memory_s", "collective_s")), 1e-12))
+    return {
+        "cells_compiled": len(run),
+        "worst_useful_cell": f"{worst['arch']}x{worst['shape']}",
+        "worst_useful": worst.get("useful_flop_ratio"),
+        "most_collective_bound": f"{coll['arch']}x{coll['shape']}",
+    }

@@ -1,0 +1,80 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 13] [--quick]
+
+Prints ``name,seconds_or_value,derived`` CSV rows:
+  table2.*   PageRank runtimes      (paper Table 2 / Figures 3-5)
+  table3.*   label-prop runtimes    (paper Table 3 / Figures 6-8)
+  fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
+  wire.*     analytic per-device wire bytes on the production mesh
+  kernel.*   push-kernel reference timing + TPU cost model
+  roofline.* dry-run roofline aggregates (reads experiments/dryrun/)
+  cost.*     the COST verdict per algorithm
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def emit(name, value, derived=""):
+    print(f"{name},{value},{derived}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=13,
+                    help="log2 vertices for the scaled paper graphs")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graphs / fewer repeats")
+    args = ap.parse_args()
+    scale = 11 if args.quick else args.scale
+    repeats = 2 if args.quick else 3
+
+    from benchmarks import kernelbench, roofline, tables
+
+    # ---- Tables 2/3 + Figures 1/2 -----------------------------------------
+    for algo, table in (("pagerank", "table2"), ("labelprop", "table3")):
+        rows = tables.run_table(algo, scale_log2=scale, repeats=repeats)
+        serial = {g: t for g, impl, p, t, ok in rows if impl == "serial"}
+        best_actor = {}
+        for g, impl, pes, t, ok in rows:
+            assert ok, f"{algo}/{g}/{impl} produced wrong output"
+            emit(f"{table}.{g}.{impl}@{pes}", f"{t:.4f}")
+            if impl not in ("serial", "dataflow"):
+                best_actor[g] = min(best_actor.get(g, float("inf")), t)
+        for g, t in best_actor.items():
+            cost = 1 if t <= serial[g] else "inf(1PE)"
+            emit(f"cost.{algo}.{g}", cost,
+                 f"best_actor={t:.4f}s serial={serial[g]:.4f}s")
+        for g, impl, pes, t, ok in rows:
+            if impl == "dataflow":
+                emit(f"fig12.{algo}.{g}.dataflow_vs_serial",
+                     f"{t / serial[g]:.2f}", "x-serial-runtime")
+
+    # ---- wire model --------------------------------------------------------
+    for g, variant, pes, bytes_ in tables.wire_table(scale_log2=scale):
+        emit(f"wire.{g}.{variant}@{pes}", f"{bytes_:.3e}", "bytes/device/iter")
+
+    # ---- kernels -----------------------------------------------------------
+    err = kernelbench.validate()
+    emit("kernel.push.validation_maxerr", f"{err:.2e}")
+    t, E = kernelbench.bench_ref()
+    emit("kernel.push.ref_jnp", f"{t:.4f}", f"{E / t / 1e6:.1f} Medges/s")
+    cm = kernelbench.kernel_cost_model()
+    emit("kernel.push.tpu_model", f"{max(cm['mxu_s'], cm['hbm_s']):.2e}",
+         f"bound={cm['bound']}")
+
+    # ---- roofline aggregates ----------------------------------------------
+    recs = roofline.load_records()
+    if recs:
+        s = roofline.summarize(recs)
+        for k, v in s.items():
+            emit(f"roofline.{k}", v)
+    else:
+        emit("roofline.cells_compiled", 0, "run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Tables 2 & 3: best runtime per (graph x PE count), plus the serial
+baseline and the dataflow ("GraphX") stand-in -- scaled to this host.
+
+On a single-core container the PE sweep that can be *measured* is PE=1 (the
+paper's own COST pivot point: does the parallel implementation on one PE
+beat the serial baseline?).  The multi-PE scaling column of the paper is
+covered by (a) the analytic wire model per variant (core.cost.wire_model)
+and (b) the multi-device engine correctness tests (tests/test_multidevice).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.graphx_analogue import (bench, labelprop_dataflow,
+                                        pagerank_dataflow)
+from repro.configs.graphs import ALPHA, GRAPHS, PAGERANK_ITERS, VARIANTS
+from repro.core import (Engine, labelprop_serial, load_dataset,
+                        pagerank_serial, partition, wire_model)
+
+
+def run_table(algorithm: str, scale_log2: int = 13, repeats: int = 3,
+              pe_counts=(1,)):
+    """-> list of (graph, impl, pes, seconds, correct)."""
+    import jax
+
+    rows = []
+    max_pes = len(jax.devices())
+    pe_counts = [p for p in pe_counts if p <= max_pes]
+    for paper_name, (dskey, *_rest) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=scale_log2)
+        if algorithm == "labelprop":
+            g = g.to_undirected()
+            serial_fn = lambda: labelprop_serial(g)
+            ref = labelprop_serial(g)[0]
+            flow_fn = lambda: labelprop_dataflow(g)
+        else:
+            serial_fn = lambda: pagerank_serial(g, ALPHA, PAGERANK_ITERS)
+            ref = pagerank_serial(g, ALPHA, PAGERANK_ITERS)
+            flow_fn = lambda: pagerank_dataflow(g, ALPHA, PAGERANK_ITERS)
+
+        t_serial = bench(serial_fn, repeats)
+        rows.append((paper_name, "serial", 1, t_serial, True))
+        t_flow = bench(flow_fn, repeats)
+        rows.append((paper_name, "dataflow", 1, t_flow, True))
+
+        for variant in VARIANTS:
+            for pes in pe_counts:
+                pg = partition(g, pes)
+                eng = Engine(pg, strategy=variant)
+                if algorithm == "labelprop":
+                    run = lambda: eng.labelprop()
+                    out = eng.labelprop()[0]
+                    ok = bool(np.array_equal(out, ref))
+                else:
+                    run = lambda: eng.pagerank(ALPHA, PAGERANK_ITERS)
+                    out = eng.pagerank(ALPHA, PAGERANK_ITERS)
+                    ok = bool(np.max(np.abs(out - ref)) < 1e-3)
+                rows.append((paper_name, variant, pes, bench(run, repeats), ok))
+    return rows
+
+
+def wire_table(scale_log2: int = 13, pe_counts=(16, 64, 128, 256)):
+    """Analytic per-iteration wire bytes/device per variant (DESIGN.md #2):
+    the quantity behind the paper's scaling curves, on the target mesh."""
+    rows = []
+    for paper_name, (dskey, *_rest) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=scale_log2)
+        for pes in pe_counts:
+            for variant, bytes_ in wire_model(g, pes).items():
+                rows.append((paper_name, variant, pes, bytes_))
+    return rows

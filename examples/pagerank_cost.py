@@ -1,0 +1,45 @@
+"""The paper's main experiment (Tables 2-3) at host scale: COST sweep.
+
+    PYTHONPATH=src python examples/pagerank_cost.py [--pes 1 2 4] [--scale 12]
+
+Multi-PE runs need forced host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/pagerank_cost.py --pes 1 2 4 8
+"""
+
+import argparse
+
+from repro.configs.graphs import GRAPHS
+from repro.core import load_dataset, run_cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pes", type=int, nargs="+", default=[1])
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--algorithm", choices=("pagerank", "labelprop", "both"),
+                    default="both")
+    args = ap.parse_args()
+
+    algos = ["pagerank", "labelprop"] if args.algorithm == "both" \
+        else [args.algorithm]
+    for paper_name, (dskey, V, E, pr_s, lp_s) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=args.scale)
+        print(f"\n=== {paper_name} (scaled stand-in: |V|={g.num_vertices:,} "
+              f"|E|={g.num_edges:,}; paper: |V|={V:,} |E|={E:,}) ===")
+        for algo in algos:
+            graph = g.to_undirected() if algo == "labelprop" else g
+            rep = run_cost(graph, algorithm=algo, pe_counts=args.pes)
+            print(f"  {algo}: serial={rep.serial_s:.3f}s "
+                  f"(paper serial: {pr_s if algo == 'pagerank' else lp_s}s "
+                  f"at full scale)")
+            for strategy, pes, t in rep.rows():
+                if strategy == "serial":
+                    continue
+                mark = " <= serial" if t <= rep.serial_s else ""
+                print(f"    {strategy:10s} @{pes} PE: {t:.3f}s{mark}")
+            print(f"    COST: { {k: v for k, v in rep.cost.items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's system in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a power-law graph, runs PageRank + connected components through the
+actor engine with every communication variant, checks them against the
+serial COST baselines, and prints the per-variant wire-byte model for the
+production TPU mesh.
+"""
+
+import numpy as np
+
+from repro.core import (Engine, components_oracle, labelprop_serial,
+                        pagerank_serial, partition, rmat, wire_model)
+from repro.kernels import ops
+
+
+def main():
+    # a scaled-down twitter_rv stand-in: power-law, E/V ~ 24
+    g = rmat(12, 24 * (1 << 12), seed=1)
+    print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,}")
+
+    # --- PageRank: serial baseline (COST Listing 1) vs actor variants ------
+    ref = pagerank_serial(g, alpha=0.85, iters=20)
+    print("\nPageRank (20 iters), max |err| vs serial baseline:")
+    for variant in ("reduction", "sortdest", "basic", "pairs"):
+        eng = Engine(partition(g, 1), strategy=variant)
+        got = eng.pagerank(alpha=0.85, iters=20)
+        print(f"  {variant:10s} {np.max(np.abs(got - ref)):.2e}")
+
+    # --- with the Pallas kernel as the local combine ------------------------
+    eng = Engine(partition(g, 1), strategy="sortdest",
+                 segment_fn=ops.make_segment_fn())
+    got = eng.pagerank(alpha=0.85, iters=20)
+    print(f"  sortdest+pallas-kernel: {np.max(np.abs(got - ref)):.2e}")
+
+    # --- connected components ----------------------------------------------
+    gu = g.to_undirected()
+    labels, iters = Engine(partition(gu, 1), strategy="sortdest").labelprop()
+    ok = np.array_equal(labels, components_oracle(gu))
+    ncomp = len(np.unique(labels))
+    print(f"\nlabel propagation: {ncomp} components in {iters} iters, "
+          f"matches union-find oracle: {ok}")
+
+    # --- the paper's argument, quantified: bytes on the wire ----------------
+    print("\nwire bytes/device/iteration (paper section IV):")
+    for pes in (16, 64, 256):
+        row = wire_model(g, pes)
+        print(f"  P={pes:3d}: " + "  ".join(f"{k}={v:,.0f}"
+                                            for k, v in row.items()))
+    print("sortdest (local combine + reduce-scatter) halves 'reduction' at "
+          "every scale -- the paper's Table 2 ordering. Note the basic/"
+          "sortdest crossover at P > 4*E/V: edge-proportional messages "
+          "eventually shrink below the dense vertex buffer, but pay "
+          "per-message indices and random-access application (the paper's "
+          "observed allocation/serialization overheads).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Regenerate the roofline tables in EXPERIMENTS.md from the dry-run JSONs.
+
+    PYTHONPATH=src python scripts/make_reports.py
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import as_markdown, load_records  # noqa: E402
+
+MARK = "<!-- ROOFLINE_TABLES -->"
+
+
+def main():
+    baseline = load_records("experiments/baseline")
+    optimized = load_records("experiments/dryrun")
+    single = [r for r in optimized if r["mesh"] == "pod16x16"]
+    multi = [r for r in optimized if r["mesh"] == "pod2x16x16"]
+    base_single = [r for r in baseline if r["mesh"] == "pod16x16"]
+
+    parts = [MARK, ""]
+    parts.append("### Baseline (paper-faithful) — single-pod 16x16, "
+                 "all 40 cells\n")
+    parts.append(as_markdown(base_single))
+    parts.append("\n### Optimized (§Perf applied) — single-pod 16x16\n")
+    parts.append(as_markdown(single))
+    parts.append("\n### Optimized — multi-pod 2x16x16 (512 chips)\n")
+    parts.append(as_markdown(multi))
+    block = "\n".join(parts) + "\n"
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    if MARK not in text:
+        raise SystemExit("marker missing in EXPERIMENTS.md")
+    # replace from the marker to the next "### Reading" heading
+    pattern = re.escape(MARK) + r".*?(?=### Reading the table)"
+    text = re.sub(pattern, block + "\n", text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(f"wrote tables: baseline={len(base_single)} cells, "
+          f"optimized single={len(single)}, multi={len(multi)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Actor-model graph processing with COST accounting (the paper's system).
+
+Public API:
+    Graph / partition / generators          repro.core.graph
+    Engine (strategy x vertex program)      repro.core.engine
+    pagerank_serial / pagerank_parallel     repro.core.pagerank
+    labelprop_serial / labelprop_parallel   repro.core.labelprop
+    run_cost / wire_model                   repro.core.cost
+"""
+
+from repro.core.graph import (Graph, PartitionedGraph, from_edges, partition,
+                              rmat, erdos_renyi, ring, two_cliques,
+                              load_dataset, dataset_names)
+from repro.core.engine import Engine, make_pe_mesh
+from repro.core.pagerank import pagerank_serial, pagerank_parallel
+from repro.core.labelprop import (labelprop_serial, labelprop_parallel,
+                                  components_oracle)
+from repro.core.cost import run_cost, wire_model, CostReport

@@ -1,0 +1,182 @@
+"""Communication strategies -- the paper's Charm++ variants as TPU collectives.
+
+Every strategy computes, per chare (mesh shard), the combined incoming
+contribution for each locally-owned vertex:
+
+    incoming[j] = combine_{e : dst(e) == base + j} value(src(e))
+
+They differ -- exactly as the paper's variants do -- in *where aggregation
+happens and what goes on the wire*:
+
+  reduction  dense |V| buffer, ``psum``              (paper: reduction tree)
+  sortdest   local combine by destination, then
+             ``psum_scatter`` (sum) or per-chunk
+             blocks + ``all_to_all`` (min)           (paper: sort destination)
+  basic      (dst, value) pairs, ``all_to_all``      (paper: p2p messages)
+  pairs      ring ``ppermute`` reduce-scatter,
+             one hop per step, overlappable          (paper: P^2 shared buffers)
+  atomic     single-shard scatter-add/min            (paper: shared buffer +
+             (no cross-chip analogue on TPU)          atomics; shared-mem only)
+
+All functions run *inside* ``shard_map`` over axis ``"pe"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+AXIS = "pe"
+
+_INT_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Combiner:
+    """A commutative monoid used to fold edge contributions per vertex."""
+
+    name: str
+    identity: float | int
+    segment: Callable  # (data, segment_ids, num_segments) -> combined
+    merge: Callable  # elementwise combine of two buffers
+
+    def mask(self, data, valid):
+        return jnp.where(valid.astype(bool), data, self.identity)
+
+
+ADD = Combiner(
+    "add", 0.0,
+    segment=lambda d, i, n: jax.ops.segment_sum(d, i, num_segments=n),
+    merge=jnp.add,
+)
+MIN = Combiner(
+    "min", _INT_SENTINEL,
+    segment=lambda d, i, n: jax.ops.segment_min(d, i, num_segments=n),
+    merge=jnp.minimum,
+)
+
+
+def _dense_contrib(vals, src_local, dst_global, edge_valid, combiner, num_chunks,
+                   chunk_size, segment_fn=None):
+    """Local per-destination combine into a dense [C*K] buffer.
+
+    This is the aggregation loop of Listing 2's ``iterate()``; with the
+    sort-destination edge layout the same call performs the paper's
+    "combine updates to one external vertex before sending" locally (adjacent
+    segment entries), which is what makes the compact per-chunk send legal.
+    """
+    contrib = combiner.mask(vals[src_local], edge_valid)
+    segment = segment_fn or combiner.segment
+    return segment(contrib, dst_global, num_chunks * chunk_size)
+
+
+# --------------------------------------------------------------------------
+# Strategies (all called per-shard inside shard_map)
+# --------------------------------------------------------------------------
+
+
+def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+    """Paper's *reduction* variant: dense |V| buffer + all-reduce.
+
+    Every chare contributes a buffer of size |V|; the reduction tree combines
+    them; each chare then slices out its own chunk.  Wire bytes/device on a
+    ring: ~2 * |V| -- twice sortdest, and memory is |V| *per chare*.
+    """
+    dense = _dense_contrib(vals, pg_arrays["src_local"], pg_arrays["dst_global"],
+                           pg_arrays["edge_valid"], combiner, num_chunks,
+                           chunk_size, segment_fn)
+    if combiner.name == "add":
+        full = jax.lax.psum(dense, AXIS)
+    else:
+        full = jax.lax.pmin(dense, AXIS)
+    me = jax.lax.axis_index(AXIS)
+    return jax.lax.dynamic_slice_in_dim(full, me * chunk_size, chunk_size)
+
+
+def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+    """Paper's *sort destination* variant (its best performer).
+
+    Edges are stored sorted by destination chunk; contributions to one
+    external vertex are combined locally, then exactly one compact message per
+    destination chunk goes on the wire.  On TPU that *is* a reduce-scatter:
+    wire bytes/device ~|V| (half of `reduction`), and the received payload is
+    already in local index order.  For non-add monoids (label propagation's
+    min) XLA has no reduce-scatter, so the same pattern is expressed as one
+    block per destination chunk + ``all_to_all`` + local merge -- identical
+    wire volume.
+    """
+    dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
+                           pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
+                           combiner, num_chunks, chunk_size, segment_fn)
+    if combiner.name == "add":
+        return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
+    blocks = dense.reshape(num_chunks, chunk_size)
+    got = jax.lax.all_to_all(blocks, AXIS, split_axis=0, concat_axis=0, tiled=True)
+    return jax.lax.reduce(got, jnp.asarray(combiner.identity, got.dtype),
+                          combiner.merge, (0,))
+
+
+def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+    """Paper's *basic* variant: point-to-point (dst, value) pair messages.
+
+    No local combining: one (dst_local, value) pair per edge is bucketed by
+    destination chunk and exchanged with ``all_to_all``; the receiver applies
+    the pairs with a segment combine.  Wire bytes are edge-proportional
+    (value + index per edge), the receive-side applies in payload order --
+    the allocation/serialization overhead the paper observes for this variant
+    shows up here as the padded pair buffers.
+    """
+    src_l = pw_arrays["pb_src_local"]  # [C, Pmax]
+    dst_l = pw_arrays["pb_dst_local"]
+    valid = pw_arrays["pb_valid"]
+    payload = combiner.mask(vals[src_l], valid)
+    got_vals = jax.lax.all_to_all(payload, AXIS, 0, 0, tiled=True)
+    got_dst = jax.lax.all_to_all(dst_l, AXIS, 0, 0, tiled=True)
+    got_valid = jax.lax.all_to_all(valid, AXIS, 0, 0, tiled=True)
+    got_vals = combiner.mask(got_vals, got_valid)
+    segment = segment_fn or combiner.segment
+    return segment(got_vals.ravel(), got_dst.ravel(), chunk_size)
+
+
+def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+    """Paper's *pairs* variant: one buffer per ordered chare pair, no global
+    synchronization.  TPU-native form: a ring of ``ppermute`` hops where each
+    shard forwards a partially-combined block and folds in its own
+    contribution -- point-to-point, overlappable with compute, no tree/barrier.
+    Wire bytes/device: (P-1) * chunk_size (same as reduce-scatter), but
+    latency is P-1 hops -- the ring analogue of "managing P^2 buffers is
+    costly at small scale" shows up as hop latency.
+    """
+    dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
+                           pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
+                           combiner, num_chunks, chunk_size, segment_fn)
+    blocks = dense.reshape(num_chunks, chunk_size)
+    me = jax.lax.axis_index(AXIS)
+    perm = [(k, (k + 1) % num_chunks) for k in range(num_chunks)]
+
+    def hop(s, acc):
+        acc = jax.lax.ppermute(acc, AXIS, perm)
+        idx = (me - 2 - s) % num_chunks
+        mine = jax.lax.dynamic_index_in_dim(blocks, idx, axis=0, keepdims=False)
+        return combiner.merge(acc, mine)
+
+    init = jax.lax.dynamic_index_in_dim(blocks, (me - 1) % num_chunks, axis=0,
+                                        keepdims=False)
+    if num_chunks == 1:
+        return init
+    return jax.lax.fori_loop(0, num_chunks - 1, hop, init)
+
+
+STRATEGIES = {
+    "reduction": reduction,
+    "sortdest": sortdest,
+    "basic": basic,
+    "pairs": pairs,
+}
+
+# Strategies that read the pairwise (edge-bucketed) layout instead of the CSR.
+PAIRWISE = {"basic"}

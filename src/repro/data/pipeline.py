@@ -1,0 +1,103 @@
+"""Deterministic, step-indexed synthetic data pipeline.
+
+Design constraints (1000-node operation):
+  * **Step-indexed**: ``batch_at(step)`` is a pure function of (seed, step),
+    so restart-after-failure resumes the exact token stream with no data
+    state in the checkpoint, and any host can produce any shard ("data
+    skipping" for elastic re-mesh is a no-op).
+  * **Learnable**: tokens follow a hidden low-rank bigram model with zipf
+    unigram marginals, so cross-entropy has real headroom below log(V) and
+    the end-to-end example shows a falling loss curve.
+  * **Cheap**: generation is a counter-based PRNG (fold_in) + one gather per
+    token step; jit-compiled, fully on-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.frontends import synth_frames, synth_patches
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Hidden-bigram token stream: P(t+1|t) ∝ softmax(E[t] @ D / tau)."""
+
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    rank: int = 32
+    tau: float = 0.5
+    active_vocab: int = 4096  # bigram structure lives in the head of the zipf
+
+    def __post_init__(self):
+        self.v_eff = min(self.vocab_size, self.active_vocab)
+        key = jax.random.key(self.seed)
+        k1, k2 = jax.random.split(key)
+        # low-rank bigram logits over the effective vocab
+        self._E = jax.random.normal(k1, (self.v_eff, self.rank), jnp.float32)
+        self._D = jax.random.normal(k2, (self.rank, self.v_eff), jnp.float32)
+        # zipf prior for the first token
+        probs = 1.0 / np.arange(1, self.v_eff + 1)
+        self._logp0 = jnp.asarray(np.log(probs / probs.sum()), jnp.float32)
+        self._gen = jax.jit(self._generate)
+
+    def _generate(self, step):
+        key = jax.random.fold_in(jax.random.key(self.seed ^ 0x5EED), step)
+        k0, kseq = jax.random.split(key)
+        t0 = jax.random.categorical(
+            k0, jnp.broadcast_to(self._logp0, (self.batch, self.v_eff)), axis=-1)
+
+        def tok_step(tok, i):
+            logits = (self._E[tok] @ self._D) / self.tau
+            nxt = jax.random.categorical(
+                jax.random.fold_in(kseq, i), logits, axis=-1)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(tok_step, t0, jnp.arange(self.seq_len - 1))
+        seq = jnp.concatenate([t0[:, None], toks.T], axis=1).astype(jnp.int32)
+        return seq
+
+    def batch_at(self, step: int) -> dict:
+        tokens = self._gen(jnp.asarray(step, jnp.int32))
+        return {"tokens": tokens, "labels": tokens}
+
+
+def batch_for_shape(cfg: ModelConfig, shape: ShapeConfig, step: int = 0,
+                    batch_override: int | None = None) -> dict:
+    """Materialize one real batch for (cfg, shape) -- smoke tests/examples."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    if cfg.frontend == "audio":
+        key = jax.random.fold_in(jax.random.key(7), step)
+        return {"frames": synth_frames(cfg, B, S, seed=step),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                             jnp.int32)}
+    if cfg.frontend == "vision":
+        text_len = S - cfg.frontend_len
+        pipe = SyntheticLM(cfg.vocab_size, B, text_len, seed=11)
+        b = pipe.batch_at(step)
+        key = jax.random.fold_in(jax.random.key(13), step)
+        return {"tokens": b["tokens"],
+                "patches": synth_patches(cfg, B, seed=step),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                             jnp.int32)}
+    pipe = SyntheticLM(cfg.vocab_size, B, S, seed=17)
+    return pipe.batch_at(step)
+
+
+def make_pipeline(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0):
+    """Training pipeline for the end-to-end example drivers."""
+    if cfg.frontend:
+        def batch_at(step):
+            shape = ShapeConfig("custom", seq_len, batch, "train")
+            return batch_for_shape(cfg, shape, step, batch_override=batch)
+        return type("FrontendPipe", (), {"batch_at": staticmethod(batch_at)})()
+    return SyntheticLM(cfg.vocab_size, batch, seq_len, seed=seed)

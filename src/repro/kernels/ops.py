@@ -1,0 +1,80 @@
+"""Jitted wrappers for the push kernels: padding, dispatch, engine hooks.
+
+On this CPU container kernels always run with ``interpret=True`` (the Pallas
+interpreter executes the kernel body faithfully); on TPU pass
+``interpret=False`` to compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import push_min, push_sum
+
+BLOCK_E = push_sum.BLOCK_E
+BLOCK_V = push_sum.BLOCK_V
+BLOCK_S = push_sum.BLOCK_S
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, fill):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+@partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
+def push(vals, src, dst, valid, num_segments, combine="add",
+         interpret=not _ON_TPU):
+    """out[s] = combine_{e: dst[e]==s, valid[e]==1} vals[src[e]].
+
+    The paper's per-chare hot loop; arbitrary (unpadded) shapes accepted.
+    """
+    identity = 0 if combine == "add" else push_min.SENTINEL
+    vals_p = _pad_to(vals, BLOCK_V, identity)
+    src_p = _pad_to(src, BLOCK_E, 0)
+    dst_p = _pad_to(dst, BLOCK_E, 0)
+    valid_p = _pad_to(valid, BLOCK_E, 0)
+    nseg_p = num_segments + ((-num_segments) % BLOCK_S)
+    if combine == "add":
+        c = push_sum.gather_sum(src_p, valid_p, vals_p, interpret=interpret)
+        out = push_sum.scatter_sum(dst_p, c, nseg_p, interpret=interpret)
+        return out[:num_segments].astype(vals.dtype)
+    c = push_min.gather_min(src_p, valid_p, vals_p, interpret=interpret)
+    out = push_min.scatter_min(dst_p, c, nseg_p, interpret=interpret)
+    return out[:num_segments]
+
+
+@partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
+def segment_reduce(data, seg_ids, num_segments, combine="add",
+                   interpret=not _ON_TPU):
+    """Scatter half only (data already gathered): engine's segment hook."""
+    identity = 0 if combine == "add" else push_min.SENTINEL
+    data_p = _pad_to(data, BLOCK_E, identity)
+    seg_p = _pad_to(seg_ids, BLOCK_E, 0)
+    nseg_p = num_segments + ((-num_segments) % BLOCK_S)
+    if combine == "add":
+        out = push_sum.scatter_sum(seg_p, data_p.astype(jnp.float32), nseg_p,
+                                   interpret=interpret)
+        return out[:num_segments].astype(data.dtype)
+    out = push_min.scatter_min(seg_p, data_p, nseg_p, interpret=interpret)
+    return out[:num_segments]
+
+
+def make_segment_fn(interpret=not _ON_TPU):
+    """Adapter for ``Engine(segment_fn=...)``: routes the local combines of
+    any strategy through the Pallas kernels (the paper's 'atomic'-style
+    shared-buffer update, done TPU-natively)."""
+
+    def fn(data, seg_ids, num_segments):
+        combine = "add" if jnp.issubdtype(data.dtype, jnp.floating) else "min"
+        return segment_reduce(data, seg_ids, num_segments, combine=combine,
+                              interpret=interpret)
+
+    return fn

@@ -1,0 +1,82 @@
+"""Pallas TPU kernels for the label-propagation hot loop (min combiner).
+
+Same tiling as ``push_sum`` but the MXU one-hot matmul does not exist for
+min, so both halves use the VPU *mask-and-reduce* idiom: broadcast the
+candidate block against the one-hot mask, replace non-matches with the
+identity (INT32_MAX), reduce with ``min`` along the edge/vertex axis.  The
+working set per grid step is one [BLOCK_E, BLOCK] i32 tile (256KB), well
+inside VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_E = 256
+BLOCK_V = 256
+BLOCK_S = 256
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _gather_min_kernel(src_ref, valid_ref, vals_ref, c_ref):
+    v = pl.program_id(1)
+    base = v * BLOCK_V
+
+    @pl.when(v == 0)
+    def _init():
+        c_ref[...] = jnp.full_like(c_ref, SENTINEL)
+
+    src = src_ref[...]
+    hit = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
+    hit = hit & (valid_ref[...] != 0)[:, None]
+    cand = jnp.where(hit, vals_ref[...][None, :], SENTINEL)  # [BE, BV]
+    c_ref[...] = jnp.minimum(c_ref[...], cand.min(axis=1))
+
+
+def _scatter_min_kernel(dst_ref, c_ref, out_ref):
+    s = pl.program_id(0)
+    e = pl.program_id(1)
+    base = s * BLOCK_S
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+
+    dst = dst_ref[...]
+    hit = (dst[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_S)[None, :])
+    cand = jnp.where(hit, c_ref[...][:, None], SENTINEL)  # [BE, BS]
+    out_ref[...] = jnp.minimum(out_ref[...], cand.min(axis=0))
+
+
+def gather_min(src, valid, vals, *, interpret=True):
+    E, V = src.shape[0], vals.shape[0]
+    return pl.pallas_call(
+        _gather_min_kernel,
+        grid=(E // BLOCK_E, V // BLOCK_V),
+        in_specs=[
+            pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+            pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+            pl.BlockSpec((BLOCK_V,), lambda e, v: (v,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+        out_shape=jax.ShapeDtypeStruct((E,), vals.dtype),
+        interpret=interpret,
+    )(src, valid, vals)
+
+
+def scatter_min(dst, c, num_segments, *, interpret=True):
+    E = dst.shape[0]
+    return pl.pallas_call(
+        _scatter_min_kernel,
+        grid=(num_segments // BLOCK_S, E // BLOCK_E),
+        in_specs=[
+            pl.BlockSpec((BLOCK_E,), lambda s, e: (e,)),
+            pl.BlockSpec((BLOCK_E,), lambda s, e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_S,), lambda s, e: (s,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), c.dtype),
+        interpret=interpret,
+    )(dst, c)

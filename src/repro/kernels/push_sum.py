@@ -1,0 +1,96 @@
+"""Pallas TPU kernels for the PageRank push hot loop (sum combiner).
+
+The paper's inner loop (Listing 2 ``iterate``/``addB``) is, per chare:
+
+    c[e]   = vals[src[e]]              # gather along sorted-by-dst edges
+    out[s] = sum_{e: dst[e]==s} c[e]   # segment reduce
+
+TPU adaptation (DESIGN.md section 2): TPUs have no performant arbitrary
+gather/scatter in VMEM, so both halves are expressed as *one-hot matmuls* on
+the MXU -- the standard TPU idiom (embedding lookups, MoE dispatch).  The
+sort-destination edge layout is what makes the scatter half a narrow-banded
+matmul: consecutive edges hit consecutive output rows, so accumulation stays
+within one output tile for long runs.
+
+  gather_sum:  grid (E/BE, V/BV);  c_blk  += onehot(src_blk - v0) @ vals_blk
+  scatter_sum: grid (S/BS, E/BE);  out_blk += onehot(dst_blk - s0).T @ c_blk
+
+Both outputs revisit the same block across the inner grid dimension, which
+Pallas guarantees stays resident in VMEM (sequential TPU grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_E = 256  # edges per tile
+BLOCK_V = 256  # source-vertex chunk
+BLOCK_S = 256  # output-segment chunk
+
+
+def _gather_sum_kernel(src_ref, valid_ref, vals_ref, c_ref):
+    v = pl.program_id(1)
+    base = v * BLOCK_V
+
+    @pl.when(v == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    src = src_ref[...]
+    onehot = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
+    onehot = onehot & (valid_ref[...] != 0)[:, None]
+    c_ref[...] += jnp.dot(onehot.astype(vals_ref.dtype), vals_ref[...],
+                          preferred_element_type=c_ref.dtype)
+
+
+def _scatter_sum_kernel(dst_ref, c_ref, out_ref):
+    s = pl.program_id(0)
+    e = pl.program_id(1)
+    base = s * BLOCK_S
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[...]
+    onehot = (dst[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_S)[None, :])
+    out_ref[...] += jnp.dot(onehot.astype(c_ref.dtype).T, c_ref[...],
+                            preferred_element_type=out_ref.dtype)
+
+
+def gather_sum(src, valid, vals, *, interpret=True):
+    """c[e] = vals[src[e]] * valid[e]; shapes padded to the block grid."""
+    E, V = src.shape[0], vals.shape[0]
+    acc = jnp.float32 if vals.dtype != jnp.float64 else vals.dtype
+    return pl.pallas_call(
+        _gather_sum_kernel,
+        grid=(E // BLOCK_E, V // BLOCK_V),
+        in_specs=[
+            pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+            pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+            pl.BlockSpec((BLOCK_V,), lambda e, v: (v,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_E,), lambda e, v: (e,)),
+        out_shape=jax.ShapeDtypeStruct((E,), acc),
+        interpret=interpret,
+    )(src, valid, vals)
+
+
+def scatter_sum(dst, c, num_segments, *, interpret=True):
+    """out[s] = sum_{e: dst[e]==s} c[e]; num_segments padded to BLOCK_S."""
+    E = dst.shape[0]
+    return pl.pallas_call(
+        _scatter_sum_kernel,
+        grid=(num_segments // BLOCK_S, E // BLOCK_E),
+        in_specs=[
+            pl.BlockSpec((BLOCK_E,), lambda s, e: (e,)),
+            pl.BlockSpec((BLOCK_E,), lambda s, e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_S,), lambda s, e: (s,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), c.dtype),
+        interpret=interpret,
+    )(dst, c)

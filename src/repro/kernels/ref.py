@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the push kernels (no Pallas)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def gather_sum_ref(src, valid, vals):
+    c = vals.astype(jnp.float32)[src]
+    return jnp.where(valid != 0, c, 0.0)
+
+
+def scatter_sum_ref(dst, c, num_segments):
+    return jax.ops.segment_sum(c, dst, num_segments=num_segments)
+
+
+def gather_min_ref(src, valid, vals):
+    c = vals[src]
+    return jnp.where(valid != 0, c, SENTINEL)
+
+
+def scatter_min_ref(dst, c, num_segments):
+    return jax.ops.segment_min(c, dst, num_segments=num_segments)
+
+
+def push_ref(vals, src, dst, valid, num_segments, combine="add"):
+    """Full hot loop: out[s] = combine_{e: dst[e]==s, valid[e]} vals[src[e]]."""
+    if combine == "add":
+        return scatter_sum_ref(dst, gather_sum_ref(src, valid, vals),
+                               num_segments).astype(vals.dtype)
+    return scatter_min_ref(dst, gather_min_ref(src, valid, vals), num_segments)

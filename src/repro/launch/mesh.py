@@ -1,0 +1,39 @@
+"""Production mesh factories.
+
+Importing this module never touches jax device state; meshes are built on
+call (the dry-run sets XLA_FLAGS *before* importing anything from repro).
+
+Axis roles (see DESIGN.md section 5):
+    pod    pure data parallelism across pods (gradient sync crosses the
+           inter-pod links exactly once per step)
+    data   in-pod data parallelism + ZeRO/fsdp parameter sharding
+    model  tensor parallelism (heads / ff / experts / vocab) and sequence
+           parallelism for long-context cells
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline (EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (per direction)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(num_devices: int | None = None, name: str = "data"):
+    """1-D mesh over whatever devices exist (examples / tests)."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)

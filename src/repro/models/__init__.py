@@ -1,0 +1,1 @@
+"""LM model substrate: configs, layers, assembly, train/serve steps."""

@@ -1,0 +1,78 @@
+"""Modality frontend stubs (per the brief: ``[audio]``/``[vlm]`` cells feed the
+transformer BACKBONE only; the modality frontend supplies precomputed
+frame/patch embeddings).
+
+``input_specs()`` in configs/ returns ShapeDtypeStructs built from these
+descriptors; the synth_* helpers materialize deterministic stand-in
+embeddings for smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PDT
+
+
+def vision_spec(cfg, batch: int):
+    """PaLiGemma-style SigLIP patch embeddings: [B, F, d_model] bf16.
+
+    F = cfg.frontend_len (e.g. 256 patches for 224x224 @ 14px), already
+    projected to d_model by the (stubbed) SigLIP tower + linear connector.
+    """
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_len, cfg.d_model), PDT)
+
+
+def audio_spec(cfg, batch: int, seq_len: int):
+    """HuBERT-style conv-feature-extractor output: [B, S, d_model] bf16.
+
+    The 7-layer strided conv stack (49Hz frame rate) is the stub; S counts
+    frames, i.e. the backbone sequence length.
+    """
+    return jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), PDT)
+
+
+def synth_patches(cfg, batch: int, seed: int = 0):
+    """Deterministic stand-in SigLIP embeddings (unit-scale gaussian)."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (batch, cfg.frontend_len, cfg.d_model))
+    return x.astype(PDT)
+
+
+def synth_frames(cfg, batch: int, seq_len: int, seed: int = 0):
+    """Deterministic stand-in conv-extractor frames."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (batch, seq_len, cfg.d_model))
+    return x.astype(PDT)
+
+
+def make_batch(cfg, batch: int, seq_len: int, seed: int = 0, train: bool = True):
+    """Synthesize one full input batch matching the model's input contract."""
+    key = jax.random.key(seed + 1)
+    if cfg.frontend == "audio":
+        out = {"frames": synth_frames(cfg, batch, seq_len, seed)}
+        if train:
+            out["labels"] = jax.random.randint(
+                key, (batch, seq_len), 0, cfg.vocab_size, jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        text_len = seq_len - cfg.frontend_len
+        assert text_len > 0, f"seq_len {seq_len} <= frontend_len {cfg.frontend_len}"
+        out = {
+            "tokens": jax.random.randint(key, (batch, text_len), 0,
+                                         cfg.vocab_size, jnp.int32),
+            "patches": synth_patches(cfg, batch, seed),
+        }
+        if train:
+            out["labels"] = jax.random.randint(
+                jax.random.fold_in(key, 1), (batch, seq_len), 0,
+                cfg.vocab_size, jnp.int32)
+        return out
+    out = {"tokens": jax.random.randint(key, (batch, seq_len), 0,
+                                        cfg.vocab_size, jnp.int32)}
+    if train:
+        out["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 1), (batch, seq_len), 0,
+            cfg.vocab_size, jnp.int32)
+    return out

@@ -1,0 +1,347 @@
+"""Model assembly: block pattern -> scanned stack, train/prefill/decode.
+
+Layer stacks execute as ONE ``lax.scan`` over ``cfg.repeats`` of the block
+pattern (plus an optional unscanned ``tail_pattern``), so HLO size -- and
+therefore dry-run compile time at 512 devices -- is independent of depth.
+
+Input contract (see configs/*.py input_specs):
+    text:   {"tokens": i32[B,S]}                (+ "labels" for train)
+    vlm:    {"tokens": i32[B,S-F], "patches": bf16[B,F,d]}   F=frontend_len
+    audio:  {"frames": bf16[B,S,d]}             (stub conv frontend)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, block):
+    mixer, mlp = block
+    ks = L._split(key, 4)
+    p = {"norm1": L.init_rmsnorm(cfg.d_model)}
+    if mixer in ("attn", "local"):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = S.init_mamba(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = S.init_mlstm(ks[0], cfg)
+    elif mixer == "slstm":
+        p["slstm"] = S.init_slstm(ks[0], cfg)
+    if mlp == "dense":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    elif mlp == "moe":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["moe"] = M.init_moe(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = L._split(key, 4 + len(cfg.layer_pattern) + len(cfg.tail_pattern))
+    params = {"embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+              "final_norm": L.init_rmsnorm(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "table": (jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(L.PDT)}
+    slots = {}
+    for i, block in enumerate(cfg.layer_pattern):
+        bk = jax.random.split(ks[2 + i], cfg.repeats)
+        slots[f"slot{i:02d}"] = jax.vmap(
+            lambda k: _init_block(k, cfg, block))(bk)
+    params["slots"] = slots
+    tail = {}
+    for i, block in enumerate(cfg.tail_pattern):
+        tail[f"tail{i:02d}"] = _init_block(
+            ks[2 + len(cfg.layer_pattern) + i], cfg, block)
+    if tail:
+        params["tail"] = tail
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Param ShapeDtypeStructs without allocation (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(seed), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(block, p, x, positions, cfg, aux):
+    mixer, mlp = block
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        out, _ = L.attention_fwd(p["attn"], h, positions, cfg, mixer)
+    elif mixer == "mamba":
+        out = S.mamba_fwd(p["mamba"], h, cfg)
+    elif mixer == "mlstm":
+        out = S.mlstm_fwd(p["mlstm"], h, cfg)
+    else:
+        out = S.slstm_fwd(p["slstm"], h, cfg)
+    x = x + out
+    if mlp == "dense":
+        x = x + L.mlp_fwd(p["mlp"], L.rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif mlp == "moe":
+        out, a = M.moe_fwd(p["moe"], L.rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        x = x + out
+        aux = aux + a
+    return constrain(x, "batch", None, None), aux
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+def _remat_scan_factor(repeats: int, threshold: int = 16) -> int:
+    """Largest divisor of ``repeats`` <= sqrt(repeats), if worth nesting."""
+    if repeats < threshold:
+        return 1
+    best = 1
+    f = 2
+    while f * f <= repeats:
+        if repeats % f == 0:
+            best = f
+        f += 1
+    return best
+
+
+def _stack_fwd(params, x, positions, cfg):
+    """Run the scanned pattern stack + tail. Returns (x, aux_loss).
+
+    Two-level rematerialization (cfg.remat != "none"):
+      * outer: the scan body saves ONLY the carried residual stream per
+        repeat (nothing_saveable) -- activation memory O(repeats * B*S*d);
+      * inner: each block is its own checkpoint with the configured policy,
+        so the backward recompute's high-water mark is one block, not one
+        whole pattern (len(layer_pattern) blocks -- 8 for jamba/xlstm).
+    """
+    apply_block = _apply_block
+    if cfg.remat != "none":
+        apply_block = jax.checkpoint(
+            _apply_block, policy=_REMAT_POLICIES[cfg.remat],
+            prevent_cse=False, static_argnums=(0, 4))
+
+    def pattern_body(carry, slot_params):
+        x, aux = carry
+        for i, block in enumerate(cfg.layer_pattern):
+            x, aux = apply_block(block, slot_params[f"slot{i:02d}"], x,
+                                 positions, cfg, aux)
+        return (x, aux), None
+
+    if cfg.remat != "none":
+        pattern_body = jax.checkpoint(
+            pattern_body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+
+    if cfg.scan_layers:
+        # sqrt-N nested remat scan for deep stacks: an outer scan of F
+        # checkpointed inner scans saves F + repeats/F residual carries
+        # instead of `repeats` (kimi-k2: 60 -> 16 carries, ~45 GB/device
+        # of [B,S,d] residuals reclaimed -- see EXPERIMENTS.md).
+        factor = _remat_scan_factor(cfg.repeats) if cfg.remat != "none" else 1
+        if factor > 1:
+            inner_n = cfg.repeats // factor
+
+            def outer_body(carry, outer_slots):
+                new_carry, _ = jax.lax.scan(pattern_body, carry, outer_slots)
+                return new_carry, None
+
+            outer_body = jax.checkpoint(
+                outer_body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+            slots2 = jax.tree.map(
+                lambda a: a.reshape((factor, inner_n) + a.shape[1:]),
+                params["slots"])
+            (x, aux), _ = jax.lax.scan(outer_body, (x, jnp.zeros((), F32)),
+                                       slots2)
+        else:
+            (x, aux), _ = jax.lax.scan(pattern_body, (x, jnp.zeros((), F32)),
+                                       params["slots"])
+    else:
+        carry = (x, jnp.zeros((), F32))
+        for r in range(cfg.repeats):
+            slot = jax.tree.map(lambda a: a[r], params["slots"])
+            carry, _ = pattern_body(carry, slot)
+        x, aux = carry
+    for i, block in enumerate(cfg.tail_pattern):
+        x, aux = apply_block(block, params["tail"][f"tail{i:02d}"], x,
+                             positions, cfg, aux)
+    return x, aux
+
+
+def _embed_inputs(params, batch, cfg):
+    """Token/frontend embedding; returns x [B,S,d]."""
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(L.PDT)
+    x = L.embed(params["embed"], batch["tokens"], cfg.d_model)
+    if cfg.frontend == "vision":
+        x = jnp.concatenate([batch["patches"].astype(L.PDT), x], axis=1)
+    return x
+
+
+def backbone(params, batch, cfg: ModelConfig):
+    """Embed + stack + final norm -> (hidden [B,S,d], aux).  The LM head is
+    applied separately (forward / last-token / chunked-CE) because a full
+    [B,S,V] logits tensor does not fit HBM for large-vocab cells."""
+    x = _embed_inputs(params, batch, cfg)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = _stack_fwd(params, x, positions, cfg)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def head_params(params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward -> (logits [B,S,V] f32, aux).  Smoke/small use;
+    big cells go through ``backbone`` + chunked heads."""
+    x, aux = backbone(params, batch, cfg)
+    logits = L.logits_fwd(head_params(params, cfg), x, cfg.final_logit_softcap)
+    return constrain(logits, "batch", None, "vocab"), aux
+
+
+def forward_last(params, batch, cfg: ModelConfig):
+    """Forward with logits for the LAST position only (prefill serving)."""
+    x, aux = backbone(params, batch, cfg)
+    logits = L.logits_fwd(head_params(params, cfg), x[:, -1:],
+                          cfg.final_logit_softcap)
+    return constrain(logits, "batch", None, "vocab"), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg, mixer, max_len):
+    if mixer == "local" and cfg.window and cfg.window < max_len:
+        return cfg.window  # ring buffer
+    return max_len
+
+
+def _init_block_cache(cfg, block, batch, max_len):
+    mixer, _ = block
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    if mixer in ("attn", "local"):
+        n = _cache_len(cfg, mixer, max_len)
+        return {"k": jnp.zeros((batch, n, kv, hd), L.PDT),
+                "v": jnp.zeros((batch, n, kv, hd), L.PDT)}
+    if mixer == "mamba":
+        return S.mamba_init_cache(cfg, batch)
+    if mixer == "mlstm":
+        return S.mlstm_init_cache(cfg, batch)
+    return S.slstm_init_cache(cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree: per slot, stacked over repeats."""
+    cache = {}
+    for i, block in enumerate(cfg.layer_pattern):
+        one = _init_block_cache(cfg, block, batch, max_len)
+        cache[f"slot{i:02d}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.repeats,) + a.shape), one)
+    for i, block in enumerate(cfg.tail_pattern):
+        cache[f"tail{i:02d}"] = _init_block_cache(cfg, block, batch, max_len)
+    return cache
+
+
+def abstract_cache(cfg, batch, max_len):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _decode_block(block, p, x, pos, cache, cfg):
+    mixer, mlp = block
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "local"):
+        # ring-buffer semantics live inside attention_decode: when the cache
+        # is window-sized the slot wraps, otherwise it degenerates to a full
+        # cache (see layers.attention_decode docstring).
+        out, (ck, cv) = L.attention_decode(
+            p["attn"], h, pos, cache["k"], cache["v"], cfg, mixer)
+        cache = {"k": ck, "v": cv}
+    elif mixer == "mamba":
+        out, cache = S.mamba_decode(p["mamba"], h, cache, cfg)
+    elif mixer == "mlstm":
+        out, cache = S.mlstm_decode(p["mlstm"], h, cache, cfg)
+    else:
+        out, cache = S.slstm_decode(p["slstm"], h, cache, cfg)
+    x = x + out
+    if mlp == "dense":
+        x = x + L.mlp_fwd(p["mlp"], L.rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif mlp == "moe":
+        out, _ = M.moe_fwd(p["moe"], L.rmsnorm(p["norm2"], x, cfg.norm_eps), cfg)
+        x = x + out
+    return x, cache
+
+
+def decode_step(params, tokens, pos, cache, cfg: ModelConfig):
+    """One decode step: tokens i32[B,1], pos scalar i32 -> (logits, cache)."""
+    x = L.embed(params["embed"], tokens, cfg.d_model)
+    x = constrain(x, "batch", None, None)
+
+    def body(x, xs):
+        slot_params, slot_cache = xs
+        for i, block in enumerate(cfg.layer_pattern):
+            sp = slot_params[f"slot{i:02d}"]
+            x, new = _decode_block(block, sp, x, pos,
+                                   slot_cache[f"slot{i:02d}"], cfg)
+            slot_cache[f"slot{i:02d}"] = new
+        return x, slot_cache
+
+    if cfg.scan_layers:
+        slot_cache = {k: v for k, v in cache.items() if k.startswith("slot")}
+        x, new_cache = jax.lax.scan(body, x, (params["slots"], slot_cache))
+    else:
+        new_cache = {}
+        for r in range(cfg.repeats):
+            sp = jax.tree.map(lambda a: a[r], params["slots"])
+            sc = jax.tree.map(lambda a: a[r],
+                              {k: v for k, v in cache.items()
+                               if k.startswith("slot")})
+            x, sc = body(x, (sp, sc))
+            new_cache = jax.tree.map(
+                lambda acc, n: acc.at[r].set(n) if hasattr(acc, "at") else n,
+                new_cache, sc) if new_cache else jax.tree.map(
+                lambda c, n: c.at[r].set(n),
+                {k: v for k, v in cache.items() if k.startswith("slot")}, sc)
+        x = x
+    for i, block in enumerate(cfg.tail_pattern):
+        x, new = _decode_block(block, params["tail"][f"tail{i:02d}"], x, pos,
+                               cache[f"tail{i:02d}"], cfg)
+        new_cache[f"tail{i:02d}"] = new
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.logits_fwd(head, x, cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Forward + cache build. Returns (last-token logits, cache, aux).
+
+    For attention slots the per-layer K/V come out of the scan as ys; SSM
+    slots carry their final recurrent state.  Used by serve examples; the
+    dry-run lowers ``forward_last`` for prefill cells (same compute/comm)."""
+    return forward_last(params, batch, cfg)

@@ -1,0 +1,155 @@
+"""Serving steps: prefill (cache build) + batched decode, pjit-ready.
+
+Shape cells (config.SHAPES):
+  * ``prefill_32k`` lowers ``prefill_step`` -- a full forward pass (compute
+    and collectives identical to forward; cache emission adds only stores).
+  * ``decode_32k`` / ``long_500k`` lower ``decode_step`` -- ONE new token
+    against a KV cache of seq_len, the memory-bound regime.
+
+KV caches are sharded [batch over (pod,data)] x [heads over model]; for the
+long-context cells the cache seq axis carries the model axis instead
+(sequence parallelism) when heads don't divide -- see cache_specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, tokens [B,1], pos scalar, cache) -> (logits, cache)."""
+
+    def decode_step(params, tokens, pos, cache):
+        return M.decode_step(params, tokens, pos, cache, cfg)
+
+    return decode_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> last-position logits [B,1,V].
+
+    The dry-run lowers this for prefill cells; the serve example uses
+    ``prefill_with_cache`` below (same compute + cache stores).
+    """
+
+    def prefill_step(params, batch):
+        logits, _ = M.forward(params, batch, cfg)
+        return logits[:, -1:]
+
+    return prefill_step
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_temperature(key, logits, temperature=1.0):
+    return jax.random.categorical(
+        key, logits[:, -1] / temperature, axis=-1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Prefill that also builds the decode cache (serve example path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_with_cache(params, batch, cfg: ModelConfig, max_len: int):
+    """Runs the prompt through the model once, returning (last_logits, cache)
+    where the cache is positioned at ``pos = prompt_len`` for decode_step.
+
+    Implemented by running decode_step over the prompt with lax.scan (token
+    at a time) -- simple and correct for every mixer family; the serve
+    example uses modest prompt lengths.  Prefill-shaped *compute* is what the
+    dry-run measures via make_prefill_step.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = M.init_cache(cfg, B, max_len)
+
+    def step(cache, i):
+        logits, cache = M.decode_step(params, tokens[:, i][:, None], i,
+                                      cache, cfg)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, jnp.arange(S))
+    return logits[-1], cache
+
+
+def generate(params, batch, cfg: ModelConfig, steps: int, max_len: int,
+             temperature: float = 0.0, key=None):
+    """Greedy/temperature generation loop returning [B, steps] new tokens."""
+    prompt_len = batch["tokens"].shape[1]
+    last_logits, cache = prefill_with_cache(params, batch, cfg, max_len)
+    tok = sample_greedy(last_logits)
+
+    def step(carry, i):
+        tok, cache, key = carry
+        logits, cache = M.decode_step(params, tok, prompt_len + i, cache, cfg)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = sample_temperature(sub, logits, temperature)
+        else:
+            nxt = sample_greedy(logits)
+        return (nxt, cache, key), nxt[:, 0]
+
+    key = key if key is not None else jax.random.key(0)
+    (_, cache, _), toks = jax.lax.scan(
+        step, (tok, cache, key), jnp.arange(steps))
+    return toks.T  # [B, steps]
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh):
+    """Spec tree for the decode cache.
+
+    KV tensors are [repeats?, B, S, KV, hd]: batch over (pod,data), heads
+    over model when divisible, else seq over model (sequence parallelism --
+    the long_500k cells and kv=1 archs land here).  SSM states shard their
+    feature axis over model.
+    """
+    sizes = dict(mesh.shape)  # works for Mesh, AbstractMesh, and test fakes
+    batch_names = tuple(n for n in ("pod", "data") if n in sizes)
+    model_n = sizes.get("model", 1)
+    bsz = int(np.prod([sizes[n] for n in batch_names])) if batch_names else 1
+
+    def leaf(x):
+        shape = x.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd >= 4:  # KV cache [*, B, S, KV, hd] or [B, S, KV, hd]
+            off = nd - 4
+            if batch_names and shape[off] % bsz == 0:
+                spec[off] = batch_names if len(batch_names) > 1 \
+                    else batch_names[0]
+            if model_n > 1 and shape[off + 2] % model_n == 0:
+                spec[off + 2] = "model"      # heads TP
+            elif model_n > 1 and shape[off + 1] % model_n == 0:
+                spec[off + 1] = "model"      # seq SP fallback (kv=1 archs)
+        elif nd >= 2:  # SSM states [*, B, di, N] / [*, B, di]
+            off = 1 if nd == 2 else nd - 3 if nd >= 3 else 0
+            # find batch dim: first dim equal to a plausible batch
+            # simpler: shard the largest trailing feature dim over model
+            if batch_names and shape[off] % bsz == 0:
+                spec[off] = batch_names if len(batch_names) > 1 \
+                    else batch_names[0]
+            for i in range(nd - 1, off, -1):
+                if model_n > 1 and shape[i] % model_n == 0:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree.map(leaf, cache_shape)

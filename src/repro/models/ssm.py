@@ -1,0 +1,337 @@
+"""Sequence mixers without attention: Mamba (jamba), mLSTM / sLSTM (xlstm).
+
+All three keep O(1) decode state -- which is why their archs run the
+``long_500k`` cell (DESIGN.md section 4).  Training forms:
+
+  mamba  selective SSM via associative scan (parallel prefix over S)
+  mlstm  chunkwise-parallel linear attention with exp gating: intra-chunk
+         quadratic [c x c] + carried matrix state between chunks (the
+         TPU-friendly form; never materializes S x S)
+  slstm  strictly sequential scalar recurrence -> lax.scan over S
+         (diagonal recurrent weights; the paper's block-diagonal R is noted
+         as a simplification in DESIGN.md)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PDT, _split
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6, simplified: B,C shared across channels; dt per channel)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    ks = _split(key, 6)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(PDT),
+        "conv_w": (jax.random.normal(ks[1], (di, K)) * K ** -0.5).astype(PDT),
+        "conv_b": jnp.zeros((di,), PDT),
+        "w_bc": (jax.random.normal(ks[2], (di, 2 * N)) * di ** -0.5).astype(PDT),
+        "w_dt": (jax.random.normal(ks[3], (di,)) * di ** -0.5).astype(F32),
+        "b_dt": jnp.full((di,), -4.6, F32),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=F32),
+                                          (di, N))),
+        "d_skip": jnp.ones((di,), F32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(PDT),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B,S,di]; w: [di,K] depthwise causal FIR. state: [B,K-1,di]."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # tap i multiplies x[t - (K-1) + i]; w[:, K-1] is the current sample's tap
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return out + b, new_state
+
+
+MAMBA_CHUNK = 256
+
+
+def _mamba_core(p, xc, z, cfg, h0=None):
+    """xc: [B,S,di] post-conv; returns y [B,S,di] and final state [B,di,N].
+
+    Chunked selective scan (the TPU analogue of Mamba's hardware-aware CUDA
+    kernel): an outer sequential scan over S/MAMBA_CHUNK chunks carries the
+    [B,di,N] state; within a chunk the recurrence is a parallel
+    associative_scan.  A monolithic associative_scan would materialize
+    [B,S,di,N] f32 level buffers -- 407 GB/device of temp for the jamba
+    train_4k cell (see EXPERIMENTS.md section Perf) -- while the chunked form
+    peaks at [B,c,di,N] per step and checkpoints the chunk body so backward
+    rebuilds one chunk at a time.
+    """
+    N = cfg.ssm_state
+    B, S, di = xc.shape
+    A = -jnp.exp(p["a_log"])  # [di,N]
+
+    c = min(MAMBA_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        xc_p = jnp.concatenate([xc, jnp.zeros((B, pad, di), xc.dtype)], 1)
+    else:
+        xc_p = xc
+    nch = (S + pad) // c
+    xcc = xc_p.reshape(B, nch, c, di).transpose(1, 0, 2, 3)  # [nch,B,c,di]
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(h, xci):
+        """h: [B,di,N] carried state; xci: [B,c,di] chunk inputs."""
+        bc = jnp.einsum("bsd,dn->bsn", xci, p["w_bc"]).astype(F32)
+        Bt, Ct = bc[..., :N], bc[..., N:]
+        dt = jax.nn.softplus(xci.astype(F32) * p["w_dt"] + p["b_dt"])
+        Ad = jnp.exp(dt[..., None] * A)             # [B,c,di,N]
+        Bx = (dt * xci.astype(F32))[..., None] * Bt[:, :, None, :]
+        Bx = Bx.at[:, 0].add(Ad[:, 0] * h)          # fold in carried state
+        _, hseq = jax.lax.associative_scan(combine, (Ad, Bx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hseq, Ct) \
+            + p["d_skip"] * xci.astype(F32)
+        return hseq[:, -1], y.astype(xc.dtype)
+
+    h = h0 if h0 is not None else jnp.zeros((B, di, N), F32)
+    h, yc = jax.lax.scan(chunk_step, h, xcc)
+    y = yc.transpose(1, 0, 2, 3).reshape(B, S + pad, di)[:, :S]
+    y = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    return y.astype(xc.dtype), h
+
+
+def mamba_fwd(p, x, cfg, want_cache=False):
+    di = cfg.ssm_expand * cfg.d_model
+    u = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = u[..., :di], u[..., di:]
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    y, h = _mamba_core(p, xc, z, cfg)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if want_cache:
+        return out, {"conv": conv_state.astype(PDT), "ssm": h}
+    return out
+
+
+def mamba_init_cache(cfg, batch, dtype=PDT):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), F32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg):
+    """x: [B,1,d]; single-step recurrence."""
+    di = cfg.ssm_expand * cfg.d_model
+    u = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = u[..., :di], u[..., di:]
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], cache["conv"])
+    xc = jax.nn.silu(xc)
+    y, h = _mamba_core(p, xc, z, cfg, h0=cache["ssm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise-parallel linear attention with exp input / sig forget gate)
+# ---------------------------------------------------------------------------
+
+MLSTM_CHUNK = 256
+_LOG_FLOOR = -30.0
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = _split(key, 3)
+    return {
+        "w_qkv": (jax.random.normal(ks[0], (d, 3 * di)) * d ** -0.5).astype(PDT),
+        "w_gates": (jax.random.normal(ks[1], (d, 2 * cfg.num_heads))
+                    * d ** -0.5).astype(F32),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(PDT),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, C0, n0):
+    """q,k,v: [B,H,S,dh]; li,lf: [B,H,S] log input / log-sigmoid forget gates.
+    Chunkwise linear-attention: returns h [B,H,S,dh], final (C, n)."""
+    B, H, S, dh = q.shape
+    c = min(MLSTM_CHUNK, S)
+    nc = S // c
+    qc = q.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    lic = li.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+    lfc = lf.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+
+    def step(carry, args):
+        C, n = carry  # [B,H,dh,dh], [B,H,dh]
+        qi, ki, vi, ii, fi = args
+        b = jnp.cumsum(fi, axis=-1)  # [B,H,c] decay from chunk start
+        btot = b[..., -1:]
+        # intra-chunk: w_ij = exp(b_i - b_j + i_j) for j <= i
+        logw = jnp.clip(b[..., :, None] - b[..., None, :] + ii[..., None, :],
+                        _LOG_FLOOR, 20.0)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(tri, jnp.exp(logw), 0.0)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki).astype(F32) * dh ** -0.5
+        h_intra = jnp.einsum("bhqk,bhkd->bhqd", w * s, vi.astype(F32))
+        # inter-chunk: decayed carried state
+        lam = jnp.exp(jnp.clip(b, _LOG_FLOOR, 0.0))  # [B,H,c]
+        h_inter = jnp.einsum("bhqd,bhde->bhqe", qi.astype(F32) * dh ** -0.5,
+                             C) * lam[..., None]
+        n_q = jnp.einsum("bhqd,bhd->bhq", qi.astype(F32) * dh ** -0.5,
+                         n) * lam
+        n_intra = jnp.einsum("bhqk,bhk->bhq", w * s, jnp.ones_like(ii))
+        denom = jnp.maximum(jnp.abs(n_q + n_intra), 1.0)
+        h = (h_intra + h_inter) / denom[..., None]
+        # state update
+        g = jnp.exp(jnp.clip(btot - b + ii, _LOG_FLOOR, 20.0))  # [B,H,c]
+        C_new = jnp.exp(jnp.clip(btot, _LOG_FLOOR, 0.0))[..., None] * C + \
+            jnp.einsum("bhkd,bhke->bhde", (g[..., None] * ki.astype(F32)),
+                       vi.astype(F32))
+        n_new = jnp.exp(jnp.clip(btot, _LOG_FLOOR, 0.0)) * n + \
+            jnp.einsum("bhkd,bhk->bhd", ki.astype(F32), g)
+        return (C_new, n_new), h
+
+    (C, n), h = jax.lax.scan(step, (C0, n0), (qc, kc, vc, lic, lfc))
+    h = h.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h, (C, n)
+
+
+def mlstm_fwd(p, x, cfg, want_cache=False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    di = cfg.ssm_expand * d
+    dh = di // H
+    qkv = jnp.einsum("bsd,de->bse", x, p["w_qkv"])
+    q, k, v = [t.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+               for t in jnp.split(qkv, 3, axis=-1)]
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(F32), p["w_gates"])
+    li = gates[..., :H].transpose(0, 2, 1)  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+    C0 = jnp.zeros((B, H, dh, dh), F32)
+    n0 = jnp.zeros((B, H, dh), F32)
+    h, (C, n) = _mlstm_chunk_scan(q, k, v, li, lf, C0, n0)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    if want_cache:
+        return out, {"C": C, "n": n}
+    return out
+
+
+def mlstm_init_cache(cfg, batch, dtype=PDT):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = di // H
+    return {"C": jnp.zeros((batch, H, dh, dh), F32),
+            "n": jnp.zeros((batch, H, dh), F32)}
+
+
+def mlstm_decode(p, x, cache, cfg):
+    B = x.shape[0]
+    H = cfg.num_heads
+    di = cfg.ssm_expand * cfg.d_model
+    dh = di // H
+    qkv = jnp.einsum("bsd,de->bse", x, p["w_qkv"])
+    q, k, v = [t.reshape(B, 1, H, dh).transpose(0, 2, 1, 3)
+               for t in jnp.split(qkv, 3, axis=-1)]
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(F32), p["w_gates"])[:, 0]
+    li, lf = gates[:, :H], jax.nn.log_sigmoid(gates[:, H:])
+    f = jnp.exp(jnp.clip(lf, _LOG_FLOOR, 0.0))[..., None]
+    i = jnp.exp(jnp.clip(li, _LOG_FLOOR, 20.0))[..., None]
+    kf = k[:, :, 0].astype(F32)
+    C = f[..., None] * cache["C"] + i[..., None] * kf[..., None] * \
+        v[:, :, 0].astype(F32)[..., None, :]
+    n = f * cache["n"] + i * kf
+    qf = q[:, :, 0].astype(F32) * dh ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", h, p["out_proj"]), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scalar recurrence, diagonal recurrent weights)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = _split(key, 3)
+    return {
+        "w_qkv": (jax.random.normal(ks[0], (d, 4 * di)) * d ** -0.5).astype(PDT),
+        "r_gates": (jax.random.normal(ks[1], (4 * di,)) * 0.1).astype(F32),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(PDT),
+    }
+
+
+def _slstm_step(p, di, state, u):
+    c, n, m, h = state
+    r = p["r_gates"]
+    pre = u.astype(F32) + jnp.concatenate(
+        [h * r[:di], h * r[di:2 * di], h * r[2 * di:3 * di],
+         h * r[3 * di:]], axis=-1)
+    zt = jnp.tanh(pre[..., :di])
+    it = pre[..., di:2 * di]
+    ft = pre[..., 2 * di:3 * di]
+    ot = jax.nn.sigmoid(pre[..., 3 * di:])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(jnp.clip(it - m_new, _LOG_FLOOR, 0.0))
+    fp = jnp.exp(jnp.clip(ft + m - m_new, _LOG_FLOOR, 0.0))
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_fwd(p, x, cfg, want_cache=False):
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    u = jnp.einsum("bsd,de->bse", x, p["w_qkv"])  # [B,S,4di]
+    s0 = tuple(jnp.zeros((B, di), F32) for _ in range(4))
+
+    def step(state, ut):
+        new = _slstm_step(p, di, state, ut)
+        return new, new[3]
+
+    (c, n, m, hf), h = jax.lax.scan(step, s0, u.transpose(1, 0, 2))
+    h = h.transpose(1, 0, 2).astype(x.dtype)  # [B,S,di]
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    if want_cache:
+        return out, {"c": c, "n": n, "m": m, "h": hf}
+    return out
+
+
+def slstm_init_cache(cfg, batch, dtype=PDT):
+    di = cfg.ssm_expand * cfg.d_model
+    z = lambda: jnp.zeros((batch, di), F32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def slstm_decode(p, x, cache, cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    u = jnp.einsum("bsd,de->bse", x, p["w_qkv"])[:, 0]
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = _slstm_step(p, di, state, u)
+    out = jnp.einsum("be,ed->bd", h.astype(x.dtype), p["out_proj"])[:, None]
+    return out, {"c": c, "n": n, "m": m, "h": h}

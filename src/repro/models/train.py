@@ -1,0 +1,236 @@
+"""Loss + train_step for every architecture (pjit-ready, ZeRO grad sync).
+
+The gradient-synchronization choice mirrors the paper's variants
+(DESIGN.md section 2):
+
+  * ``cfg.zero=True``  (default): params carry an ``fsdp`` axis, so GSPMD
+    lowers grad sync to reduce-scatter + all-gather -- the *sort-destination*
+    pattern (combine locally, send exactly what each shard owns).
+  * ``cfg.zero=False``: params replicated on the data axes, grad sync is a
+    dense all-reduce -- the paper's *reduction* variant, kept as the
+    comparison baseline (see benchmarks/gradsync.py).
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function suitable for ``jax.jit`` with in/out shardings from
+``sharding.param_specs``; ``train_state_specs`` gives the matching spec tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import param_specs, resolve
+from repro.optim import (adamw, chain, clip_by_global_norm, apply_updates,
+                         global_norm, wsd_schedule)
+
+F32 = jnp.float32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+def make_optimizer(peak_lr=3e-4, warmup=100, total=10_000, clip=1.0,
+                   weight_decay=0.1, moment_dtype=F32):
+    return chain(clip_by_global_norm(clip),
+                 adamw(wsd_schedule(peak_lr, warmup, total),
+                       weight_decay=weight_decay,
+                       mu_dtype=moment_dtype, nu_dtype=moment_dtype))
+
+
+def optimizer_for(cfg: ModelConfig, **kw):
+    return make_optimizer(moment_dtype=jnp.dtype(cfg.opt_moment_dtype), **kw)
+
+
+def init_state(key, cfg: ModelConfig, optimizer=None) -> TrainState:
+    optimizer = optimizer or optimizer_for(cfg)
+    params = M.init_params(key, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=optimizer.init(params))
+
+
+def abstract_state(cfg: ModelConfig, optimizer=None) -> TrainState:
+    """ShapeDtypeStruct TrainState (dry-run: no allocation)."""
+    optimizer = optimizer or optimizer_for(cfg)
+    return jax.eval_shape(partial(init_state, cfg=cfg, optimizer=optimizer),
+                          jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, labels):
+    """Mean token cross-entropy; logits f32 [B,S,V], labels i32 [B,S]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+# Sequence-chunk size for the CE head: per chunk the live logits tensor is
+# [B, CHUNK, V] f32, sharded (batch over pod/data, vocab over model) -- e.g.
+# gemma3 train_4k: 16 x 512 x 16384 x 4B = 537 MB/device transient, instead
+# of an unshardable multi-TB full [B,S,V].  The chunk body is checkpointed so
+# backward recomputes logits per chunk rather than storing them.
+CE_CHUNK = 512
+
+
+def chunked_xent(x, head, labels, cfg, chunk: int = CE_CHUNK):
+    """CE over seq-chunks: x [B,S,d] hidden, head {'table': [V,d]}.
+
+    Returns summed (logz - gold) and the token count, so the caller controls
+    the normalization (mean over tokens).
+    """
+    from repro.models import layers as L
+
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((B, pad, d), x.dtype)], axis=1)
+        labels = jnp.concatenate(
+            [labels, jnp.full((B, pad), -1, labels.dtype)], axis=1)
+    n = (S + pad) // chunk
+    xc = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, args):
+        xs, ls = args
+        logits = L.logits_fwd(head, xs, cfg.final_logit_softcap)  # [B,c,V] f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via mask-reduce, not take_along_axis: with V sharded
+        # over the model axis this lowers to a local reduce + psum instead
+        # of an all-gathered [B,c,V] gather.
+        vids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(vids == ls[..., None], logits, 0.0), axis=-1)
+        valid = (ls >= 0).astype(F32)
+        return carry + jnp.sum((logz - gold) * valid), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), F32), (xc, lc))
+    return total, B * S  # S = original (pre-pad) length; padded slots masked
+
+
+def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
+    x, aux = M.backbone(params, batch, cfg)
+    labels = batch["labels"]
+    if not cfg.encoder_only:
+        # next-token prediction: hidden[t] predicts labels[t+1]
+        x, labels = x[:, :-1], labels[:, 1:]
+    total, count = chunked_xent(x, M.head_params(params, cfg), labels, cfg)
+    ce = total / count
+    loss = ce + aux_weight * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None, microbatches: int = 1):
+    """(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates grads over batch slices with
+    ``lax.scan`` -- smaller activation high-water *and* it lets XLA overlap
+    microbatch i+1's compute with microbatch i's tail collectives (the
+    paper's "send early, move on" at the training-loop level).
+    """
+    optimizer = optimizer or optimizer_for(cfg)
+    grad_fn = jax.value_and_grad(partial(loss_fn, cfg=cfg), has_aux=True)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def slice_mb(x, i):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, metrics_acc = carry
+            mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(F32), acc, grads)
+            metrics_acc = jax.tree.map(lambda a, m: a + m / microbatches,
+                                       metrics_acc, metrics)
+            return (acc, metrics_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        mzero = {"loss": jnp.zeros((), F32), "ce": jnp.zeros((), F32),
+                 "aux": jnp.zeros((), F32)}
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zeros, mzero), jnp.arange(microbatches))
+        grads = jax.tree.map(
+            lambda g, p: (g / microbatches).astype(p.dtype), grads, params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        grads, metrics = accumulate(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, grad_norm=global_norm(grads))
+        return TrainState(step=state.step + 1, params=params,
+                          opt_state=opt_state), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs for jit in/out
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(state_shape: TrainState, mesh, zero=True) -> TrainState:
+    """Spec tree matching a TrainState: opt moments shard like their params."""
+    pspecs = param_specs(state_shape.params, mesh, zero=zero)
+
+    def opt_specs(tree):
+        # mu/nu mirror params; count is replicated; clip state is ().
+        def walk(sub):
+            if isinstance(sub, dict) and set(sub) >= {"mu", "nu"}:
+                return {**{k: P() for k in sub if k not in ("mu", "nu")},
+                        "mu": pspecs, "nu": pspecs}
+            if isinstance(sub, tuple):
+                return tuple(walk(s) for s in sub)
+            if isinstance(sub, dict):
+                return {k: walk(v) for k, v in sub.items()}
+            return jax.tree.map(lambda _: P(), sub)
+
+        return walk(tree)
+
+    return TrainState(step=P(), params=pspecs,
+                      opt_state=opt_specs(state_shape.opt_state))
+
+
+def batch_specs(batch_shape, mesh) -> dict:
+    """Batch dim sharded over (pod, data); seq/vocab dims replicated."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    spec = tuple(names) if len(names) > 1 else (names[0] if names else None)
+
+    def one(leaf):
+        dims = [spec] + [None] * (len(leaf.shape) - 1)
+        # replicate if batch not divisible
+        import numpy as np
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = int(np.prod([sizes[n] for n in names])) if names else 1
+        if total > 1 and leaf.shape[0] % total == 0:
+            return P(*dims)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape)

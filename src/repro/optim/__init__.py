@@ -1,0 +1,15 @@
+"""Minimal optax-style optimizer substrate (pure pytrees, shardable).
+
+Public API:
+    adamw / sgd                     transforms (init, update)
+    chain, clip_by_global_norm      composition
+    wsd_schedule, cosine_schedule   lr schedules
+    compressed_psum, ef_compress    int8 gradient compression (+error feedback)
+"""
+
+from repro.optim.transforms import (adamw, sgd, chain, clip_by_global_norm,
+                                    scale_by_schedule, apply_updates,
+                                    global_norm, Optimizer)
+from repro.optim.schedule import wsd_schedule, cosine_schedule, constant_schedule
+from repro.optim.compress import (quantize_int8, dequantize_int8,
+                                  compressed_psum, make_error_feedback)

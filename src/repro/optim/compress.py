@@ -1,0 +1,105 @@
+"""Int8 gradient compression for data-parallel synchronization.
+
+The cross-pod gradient all-reduce is the one collective that traverses the
+slow inter-pod links (DCN/optical), so it is where compression pays.  Scheme:
+blockwise symmetric int8 quantization (per 256-value block max-abs scale),
+``all_gather`` of the int8 payloads + f16 scales over the compressed axis,
+dequantize-and-sum locally.  Wire bytes vs an f32 ring all-reduce:
+
+    all-reduce f32:  2 * 4 * N * (P-1)/P   bytes/device
+    compressed  :    (1 * N + 2 * N/256) * (P-1)   bytes/device
+
+i.e. ~4x fewer bytes at P=2 pods (and still ~2.6x at P=4).  Because the sum
+happens *after* dequantization, the result is exact w.r.t. the quantized
+values -- no accumulation-order error; quantization error itself is handled
+by *error feedback* (residual carried into the next step), which keeps SGD /
+Adam convergence unaffected (Seide et al., Karimireddy et al.).
+
+``compressed_psum`` is used inside ``shard_map`` (see models/train.py's
+``dp_grad_sync`` and the COST engine).  On the production mesh the same
+function is applied over the "pod" axis only; intra-pod reduction stays
+full-precision reduce-scatter (ICI is fast, DCN is not).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_flat(x, block=BLOCK):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, pad
+
+
+def quantize_int8(x, block=BLOCK):
+    """x -> (q int8 [Nb, block], scales f16 [Nb]); symmetric per-block."""
+    flat, _ = _pad_flat(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_int8(q, scale, shape, block=BLOCK):
+    flat = (q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(x, axis_name: str, block=BLOCK):
+    """Sum ``x`` across ``axis_name`` moving int8 (+f16 scales) on the wire.
+
+    Must be called inside ``shard_map``.  Exact given the quantized values
+    (dequantize-then-sum in f32).
+    """
+    q, scale = quantize_int8(x, block)
+    q_all = jax.lax.all_gather(q, axis_name)          # [P, Nb, block] int8
+    s_all = jax.lax.all_gather(scale, axis_name)      # [P, Nb] f16
+    deq = q_all.astype(jnp.float32) * s_all.astype(jnp.float32)[..., None]
+    flat = deq.sum(axis=0).reshape(-1)
+    n = 1
+    for s in x.shape:
+        n *= s
+    return flat[:n].reshape(x.shape).astype(x.dtype)
+
+
+def make_error_feedback():
+    """Error-feedback wrapper: carries the quantization residual.
+
+    usage:
+        ef_init, ef_apply = make_error_feedback()
+        residual = ef_init(grads)
+        (synced, residual) = ef_apply(grads, residual, axis_name)
+    """
+
+    def init(tree):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+    def apply(tree, residual, axis_name: str, block=BLOCK):
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale = quantize_int8(corrected, block)
+            local_deq = dequantize_int8(q, scale, g.shape, block)
+            new_r = corrected - local_deq  # what this step failed to send
+            synced = compressed_psum(corrected, axis_name, block)
+            return synced.astype(g.dtype), new_r
+
+        pairs = jax.tree.map(one, tree, residual)
+        synced = jax.tree.map(lambda t: t[0], pairs,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_res = jax.tree.map(lambda t: t[1], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return synced, new_res
+
+    return init, apply

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_frac * peak``."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        # (step+1)/warmup: the first step trains at peak/warmup, not at 0
+        warm = peak_lr * jnp.minimum((step + 1) / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return fn
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor_frac: float = 0.0):
+    """Warmup-Stable-Decay: linear warmup, flat, linear cooldown over the
+    final ``decay_frac`` of training (modern LLM default)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        # (step+1)/warmup: the first step trains at peak/warmup, not at 0
+        warm = peak_lr * jnp.minimum((step + 1) / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                     0.0, 1.0)
+        decay = peak_lr * (1 - (1 - floor_frac) * t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < decay_start, peak_lr, decay))
+
+    return fn

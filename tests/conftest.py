@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose -- tests see the
+real (single) device; multi-device behaviour is tested via subprocesses in
+test_multidevice.py / test_elastic.py (the dry-run owns its own flags)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""Checkpoint store: exact roundtrip, atomicity, GC, async writer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.checkpoint.store import _list_steps
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16) * 1.5,
+                   "c": jnp.asarray(7, jnp.int32)},
+        "list": [jnp.zeros((5,), jnp.float16)],
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    restored, step = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_preserved_bitwise(tmp_path):
+    t = {"w": (jnp.arange(64, dtype=jnp.float32) * 0.1).astype(jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 1, t)
+    r, _ = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: t))
+    assert np.array_equal(np.asarray(t["w"]).view(np.uint16),
+                          np.asarray(r["w"]).view(np.uint16))
+
+
+def test_latest_and_gc(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, t, keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    assert sorted(_list_steps(str(tmp_path))) == [4, 5]
+
+
+def test_crashed_tmp_ignored(tmp_path):
+    t = tree()
+    os.makedirs(tmp_path / "step_00000009.tmp_junk")
+    save_checkpoint(str(tmp_path), 1, t)
+    assert latest_step(str(tmp_path)) == 1
+    # junk cleaned by gc
+    assert not any(".tmp_" in n for n in os.listdir(tmp_path))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path),
+                           jax.eval_shape(lambda: {"w": jnp.zeros((5,))}))
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(
+            str(tmp_path),
+            jax.eval_shape(lambda: {"w": jnp.zeros((4,)),
+                                    "extra": jnp.zeros((1,))}))
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = tree()
+    for s in (10, 20, 30):
+        ck.save(s, t)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 30
+    assert sorted(_list_steps(str(tmp_path))) == [20, 30]
+    r, _ = restore_checkpoint(str(tmp_path), jax.eval_shape(lambda: t))
+    assert np.array_equal(np.asarray(r["a"]), np.asarray(t["a"]))
+
+
+def test_no_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "empty"), {"w": jnp.zeros(1)})

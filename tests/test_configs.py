@@ -1,0 +1,114 @@
+"""Assigned-architecture configs: exact numbers, cells, input specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models.config import SHAPES
+
+# (arch, L, d_model, H, kv, d_ff-or-expert-ff, vocab, experts, top_k)
+ASSIGNED = {
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536, 16, 2),
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152, 0, 0),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144, 0, 0),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936, 0, 0),
+    "gemma2-9b": (42, 3584, 16, 8, 14336, 256000, 0, 0),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840, 384, 8),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048, 16, 1),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216, 0, 0),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304, 0, 0),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504, 0, 0),
+}
+
+NAMEPLATE_B = {
+    "jamba-1.5-large-398b": 398, "kimi-k2-1t-a32b": 1000,
+    "gemma2-9b": 9, "gemma3-1b": 1, "xlstm-350m": 0.35,
+}
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_assigned_numbers(arch):
+    L, d, H, kv, ff, vocab, E, k = ASSIGNED[arch]
+    cfg = configs.get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.vocab_size == vocab
+    assert cfg.num_experts == E
+    assert cfg.top_k == k
+    if E:
+        assert cfg.expert_ff == ff
+    else:
+        assert cfg.d_ff == ff
+
+
+@pytest.mark.parametrize("arch", list(NAMEPLATE_B))
+def test_param_counts_near_nameplate(arch):
+    cfg = configs.get_config(arch)
+    n = cfg.param_count() / 1e9
+    plate = NAMEPLATE_B[arch]
+    assert 0.8 * plate <= n <= 1.25 * plate, f"{arch}: {n:.1f}B vs {plate}B"
+
+
+def test_cell_enumeration():
+    cells = list(configs.all_cells())
+    assert len(cells) == 40
+    runs = [c for c in cells if c[2] == "run"]
+    assert len(runs) == 33
+    skipped = {(a, s) for a, s, st in cells if st != "run"}
+    assert skipped == {
+        ("granite-20b", "long_500k"), ("qwen1.5-4b", "long_500k"),
+        ("kimi-k2-1t-a32b", "long_500k"),
+        ("llama4-scout-17b-a16e", "long_500k"),
+        ("paligemma-3b", "long_500k"),
+        ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+    }
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_shapes(shape_name):
+    shape = SHAPES[shape_name]
+    for arch in ("qwen1.5-4b", "paligemma-3b", "hubert-xlarge"):
+        cfg = configs.get_config(arch)
+        if configs.cell_status(cfg, shape) != "run":
+            continue
+        specs = configs.input_specs(cfg, shape)
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (B, 1)
+            assert specs["pos"].shape == ()
+            assert len(jax.tree.leaves(specs["cache"])) > 0
+        elif cfg.frontend == "audio":
+            assert specs["frames"].shape == (B, S, cfg.d_model)
+        elif cfg.frontend == "vision":
+            assert specs["tokens"].shape == (B, S - cfg.frontend_len)
+            assert specs["patches"].shape == (B, cfg.frontend_len, cfg.d_model)
+        else:
+            assert specs["tokens"].shape == (B, S)
+        if shape.kind == "train":
+            assert specs["labels"].shape == (B, S)
+        else:
+            assert "labels" not in specs
+
+
+def test_smoke_configs_are_small():
+    for arch in configs.list_archs():
+        smoke = configs.smoke_config(arch)
+        assert smoke.param_count() < 50e6, arch
+        # same family / block structure
+        full = configs.get_config(arch)
+        assert smoke.family == full.family
+        assert [m for m, _ in smoke.layer_pattern] == \
+            [m for m, _ in full.layer_pattern]

@@ -1,0 +1,44 @@
+"""Label propagation connected components vs union-find oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (components_oracle, from_edges, labelprop_parallel,
+                        labelprop_serial, two_cliques)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30).flatmap(
+    lambda n: st.tuples(st.just(n), st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=0, max_size=80))))
+def test_serial_matches_union_find(ne):
+    n, edges = ne
+    src = np.array([e[0] for e in edges] or [0], np.int32)
+    dst = np.array([e[1] for e in edges] or [0], np.int32)
+    g = from_edges(n, src, dst).to_undirected()
+    labels, iters = labelprop_serial(g)
+    assert np.array_equal(labels, components_oracle(g))
+
+
+def test_two_cliques_two_components():
+    g = two_cliques(12).to_undirected()
+    labels, _ = labelprop_serial(g)
+    assert len(set(labels.tolist())) == 2
+    assert set(labels[:6]) == {0}
+    assert set(labels[6:]) == {6}
+
+
+def test_parallel_1pe_matches_oracle():
+    g = two_cliques(16).to_undirected()
+    oracle = components_oracle(g)
+    for strategy in ("reduction", "sortdest", "basic", "pairs"):
+        labels, iters = labelprop_parallel(g, 1, strategy=strategy)
+        assert np.array_equal(labels, oracle), strategy
+        assert iters >= 1
+
+
+def test_isolated_vertices_keep_own_label():
+    g = from_edges(5, np.array([0]), np.array([1])).to_undirected()
+    labels, _ = labelprop_serial(g)
+    assert labels.tolist() == [0, 0, 2, 3, 4]

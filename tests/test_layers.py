@@ -1,0 +1,124 @@
+"""Transformer layers: attention vs naive oracle, rope/norm properties,
+decode-vs-forward consistency (the serving correctness contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def naive_attention(q, k, v, q_pos, k_pos, causal=True, window=0, cap=0.0):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    s = L.softcap(s, cap)
+    s = s + L._mask(q_pos, k_pos, causal, window)[None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 8, 0.0), (False, 0, 0.0), (True, 0, 30.0),
+    (True, 16, 50.0),
+])
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (4, 1)])
+def test_chunked_attention_vs_naive(causal, window, cap, H, KV):
+    B, S, hd = 2, 64, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    want = naive_attention(q, k, v, pos, pos, causal, window, cap)
+    for q_chunk, kv_chunk in [(16, 16), (32, 8), (64, 64)]:
+        got = L.chunked_attention(q, k, v, pos, pos, causal=causal,
+                                  window=window, logit_softcap=cap,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_rope_properties():
+    B, S, H, hd = 1, 8, 2, 16
+    x = jax.random.normal(jax.random.key(0), (B, S, H, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = L.rope(x, pos)
+    # norm preserving (rotation)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, hd))
+    def dot_at(m, n):
+        qm = L.rope(q, jnp.array([m], jnp.int32))
+        kn = L.rope(k, jnp.array([n], jnp.int32))
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_rmsnorm():
+    x = jax.random.normal(jax.random.key(0), (4, 32)) * 10
+    p = L.init_rmsnorm(32)
+    out = np.asarray(L.rmsnorm(p, x))
+    rms = np.sqrt((out ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = np.asarray(L.softcap(x, 30.0))
+    assert np.all(np.abs(y) <= 30.0)
+    np.testing.assert_allclose(np.asarray(L.softcap(x, 0.0)), np.asarray(x))
+
+
+@pytest.mark.parametrize("pattern,window", [
+    ((("attn", "dense"),), 0),
+    ((("local", "dense"), ("attn", "dense")), 8),
+])
+def test_decode_matches_forward(pattern, window):
+    """Teacher-forcing consistency: step-by-step decode logits == full
+    forward logits at every position.  This is THE serving contract."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      layer_pattern=pattern, window=window, remat="none")
+    params = M.init_params(jax.random.key(0), cfg)
+    S = 24
+    tokens = jax.random.randint(jax.random.key(1), (2, S), 0, 64, jnp.int32)
+    full_logits, _ = M.forward(params, {"tokens": tokens}, cfg)
+    scale = float(jnp.max(jnp.abs(full_logits)))  # bf16 noise is relative
+    cache = M.init_cache(cfg, 2, S)
+    errs = []
+    for t in range(S):
+        lg, cache = M.decode_step(params, tokens[:, t:t + 1], t, cache, cfg)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t]))))
+    # bf16 logits have ~2^-8 relative resolution; 2 ulp is agreement
+    assert max(errs) / scale < 1e-2, \
+        f"decode diverges from forward: {max(errs)} (scale {scale})"
+
+
+def test_ring_cache_matches_full_cache():
+    """Sliding-window decode via the ring buffer == decode with a full cache
+    and the window mask."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      layer_pattern=(("local", "dense"),), window=8,
+                      remat="none")
+    params = M.init_params(jax.random.key(0), cfg)
+    S = 20
+    tokens = jax.random.randint(jax.random.key(1), (1, S), 0, 64, jnp.int32)
+    ring = M.init_cache(cfg, 1, 8)     # window-sized ring
+    full = M.init_cache(cfg, 1, S)     # full-length cache
+    for t in range(S):
+        lr, ring = M.decode_step(params, tokens[:, t:t + 1], t, ring, cfg)
+        lf, full = M.decode_step(params, tokens[:, t:t + 1], t, full, cfg)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                                   rtol=2e-2, atol=2e-2)

@@ -1,0 +1,94 @@
+"""MoE: dense path vs per-token oracle, capacity drops, aux loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+
+
+def make_cfg(E=8, k=2, cf=8.0):
+    return ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                       layer_pattern=(("attn", "moe"),), num_experts=E,
+                       top_k=k, moe_d_ff=48, capacity_factor=cf,
+                       remat="none")
+
+
+def oracle_moe(p, x, cfg):
+    """Per-token loop: softmax router, top-k experts, no capacity."""
+    B, S, d = x.shape
+    xt = np.asarray(x.reshape(B * S, d), np.float32)
+    router = np.asarray(p["router"], np.float32)
+    wg = np.asarray(p["w_gate"], np.float32)
+    wi = np.asarray(p["w_in"], np.float32)
+    wo = np.asarray(p["w_out"], np.float32)
+    out = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        logits = xt[t] @ router
+        gates = np.exp(logits - logits.max())
+        gates /= gates.sum()
+        top = np.argsort(-gates)[: cfg.top_k]
+        w = gates[top] / gates[top].sum()
+        for j, e in enumerate(top):
+            h = np.maximum(xt[t] @ wg[e], 0) * (xt[t] @ wg[e]) / (
+                1 + np.exp(-(xt[t] @ wg[e])))  # silu approx handled below
+        # recompute with silu properly
+        acc = np.zeros(d)
+        for j, e in enumerate(top):
+            a = xt[t] @ wg[e]
+            silu = a / (1 + np.exp(-a))
+            h = silu * (xt[t] @ wi[e])
+            acc += w[j] * (h @ wo[e])
+        out[t] = acc
+    return out.reshape(B, S, d)
+
+
+def test_dense_matches_oracle():
+    cfg = make_cfg()
+    p = MOE.init_moe(jax.random.key(0), cfg)
+    # float32 params for a tight comparison
+    p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32), jnp.float32)
+    got, aux = MOE.moe_fwd_dense(p, x, cfg)
+    want = oracle_moe(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_tokens():
+    """cf tiny -> most slots dropped -> output far smaller in norm."""
+    cfg_full = make_cfg(cf=100.0)
+    cfg_tight = make_cfg(cf=0.01)
+    p = MOE.init_moe(jax.random.key(0), cfg_full)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32), jnp.bfloat16)
+    full, _ = MOE.moe_fwd_dense(p, x, cfg_full)
+    tight, _ = MOE.moe_fwd_dense(p, x, cfg_tight)
+    nf = float(jnp.linalg.norm(full.astype(jnp.float32)))
+    nt = float(jnp.linalg.norm(tight.astype(jnp.float32)))
+    assert nt < nf
+
+
+def test_slot_positions_are_ranks():
+    e = jnp.asarray([2, 0, 2, 1, 0, 2], jnp.int32)
+    pos = MOE._slot_positions(e, 3)
+    # bucket 0: slots 1,4 -> 0,1 ; bucket 1: slot 3 -> 0; bucket 2: 0,2,5
+    assert pos.tolist() == [0, 0, 1, 0, 1, 2]
+
+
+def test_aux_loss_uniform_routing_is_one():
+    """Balanced routing should give aux ~= 1 (E * sum(1/E * 1/E) * E)."""
+    cfg = make_cfg(E=4, k=1)
+    T = 4096
+    gates = jnp.ones((T, 4), jnp.float32) / 4
+    top_idx = jnp.asarray(np.random.default_rng(0).integers(0, 4, (T, 1)))
+    aux = MOE._aux_loss(gates, top_idx, cfg)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=0.1)
+
+
+def test_capacity_formula():
+    cfg = make_cfg(E=8, k=2, cf=1.0)
+    assert MOE.capacity(800, cfg) == 201
+    assert MOE.capacity(1, cfg) >= cfg.top_k

@@ -1,0 +1,153 @@
+"""Multi-device behaviour, run in ONE subprocess with 8 forced host devices
+(the main pytest process keeps the real single device per the dry-run
+contract -- XLA_FLAGS must not leak into other tests)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+results = {}
+
+# ---- 1) graph engine: every strategy x PE count vs serial oracles --------
+from repro.core import (rmat, two_cliques, pagerank_serial, pagerank_parallel,
+                        labelprop_serial, labelprop_parallel, components_oracle)
+g = rmat(8, 2000, seed=3)
+ref = pagerank_serial(g)
+pr_err = {}
+for strat in ("reduction", "sortdest", "basic", "pairs"):
+    for pes in (2, 4, 8):
+        got = pagerank_parallel(g, pes, strategy=strat)
+        pr_err[f"{strat}@{pes}"] = float(np.max(np.abs(got - ref)))
+results["pagerank_max_err"] = max(pr_err.values())
+
+gu = two_cliques(40).to_undirected()
+oracle = components_oracle(gu)
+lp_ok = all(
+    np.array_equal(labelprop_parallel(gu, pes, strategy=s)[0], oracle)
+    for s in ("reduction", "sortdest", "basic", "pairs") for pes in (2, 4))
+results["labelprop_ok"] = bool(lp_ok)
+
+# ---- 2) sharded MoE == dense reference ------------------------------------
+from repro.models.config import ModelConfig
+from repro.models import moe as MOE
+cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  layer_pattern=(("attn","moe"),), num_experts=8, top_k=2,
+                  moe_d_ff=96, capacity_factor=8.0)
+p = MOE.init_moe(jax.random.key(0), cfg)
+x = jax.random.normal(jax.random.key(1), (4, 16, 64), jnp.bfloat16)
+ref_moe, _ = MOE.moe_fwd_dense(p, x, cfg)
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    got_moe, _ = jax.jit(
+        lambda p, x: MOE.moe_fwd(p, x, cfg),
+        in_shardings=(jax.tree.map(lambda _: NamedSharding(mesh, P()), p),
+                      NamedSharding(mesh, P("data", None, None))))(p, x)
+results["moe_err"] = float(jnp.max(jnp.abs(
+    got_moe.astype(jnp.float32) - ref_moe.astype(jnp.float32))))
+
+# ---- 3) sharded train step == single-device train step --------------------
+from repro.models import train as T
+from repro.data import SyntheticLM
+tcfg = ModelConfig(name="t2", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256)
+opt = T.make_optimizer(peak_lr=1e-3, warmup=1, total=10)
+pipe = SyntheticLM(256, batch=8, seq_len=32, seed=0)
+batch = pipe.batch_at(0)
+
+s_single = T.init_state(jax.random.key(0), tcfg, opt)
+s_single, m_single = jax.jit(T.make_train_step(tcfg, opt))(s_single, batch)
+
+mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh2):
+    state = T.init_state(jax.random.key(0), tcfg, opt)
+    specs = T.train_state_specs(jax.eval_shape(lambda: state), mesh2, zero=True)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh2, s), specs,
+                      is_leaf=lambda s: isinstance(s, P))
+    state = jax.device_put(state, sh)
+    bspec = jax.tree.map(lambda s: NamedSharding(mesh2, s),
+                         T.batch_specs(jax.eval_shape(lambda: batch), mesh2),
+                         is_leaf=lambda s: isinstance(s, P))
+    batch_sharded = jax.device_put(batch, bspec)
+    state, m_sharded = jax.jit(T.make_train_step(tcfg, opt),
+                               in_shardings=(sh, bspec),
+                               out_shardings=(sh, None))(state, batch_sharded)
+results["train_loss_delta"] = abs(float(m_single["loss"]) -
+                                  float(m_sharded["loss"]))
+params_delta = max(
+    float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+    for a, b in zip(jax.tree.leaves(s_single.params),
+                    jax.tree.leaves(state.params)))
+results["train_params_delta"] = params_delta
+
+# ---- 3b) ring attention == chunked attention -------------------------------
+from repro.models import layers as LY
+rcfg = ModelConfig(name="r", family="dense", num_layers=1, d_model=48,
+                   num_heads=6, num_kv_heads=3, d_ff=96, vocab_size=64,
+                   qkv_bias=True, remat="none")
+rp = jax.tree.map(lambda a: a.astype(jnp.float32),
+                  LY.init_attention(jax.random.key(7), rcfg))
+rx = jax.random.normal(jax.random.key(8), (4, 64, 48), jnp.float32)
+rref, _ = LY.attention_fwd(rp, rx, jnp.arange(64, dtype=jnp.int32), rcfg, "attn")
+rmesh = jax.make_mesh((2, 4), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(rmesh):
+    rgot = jax.jit(
+        lambda p, x: LY.ring_attention_block(p, x, rcfg, "attn", rmesh, 4),
+        in_shardings=(jax.tree.map(lambda _: NamedSharding(rmesh, P()), rp),
+                      NamedSharding(rmesh, P("data", None, None))))(rp, rx)
+results["ring_attn_err"] = float(jnp.max(jnp.abs(rgot - rref)))
+
+# ---- 4) compressed_psum == psum -------------------------------------------
+from repro.optim import compressed_psum
+import functools
+mesh3 = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+xs = jax.random.normal(jax.random.key(5), (8, 1024), jnp.float32)
+
+@functools.partial(jax.shard_map, mesh=mesh3, in_specs=P("dp"),
+                   out_specs=P("dp"), check_vma=False)
+def comp(v):
+    return compressed_psum(v, "dp")[None]
+
+@functools.partial(jax.shard_map, mesh=mesh3, in_specs=P("dp"),
+                   out_specs=P("dp"), check_vma=False)
+def exact(v):
+    return jax.lax.psum(v, "dp")[None]
+
+ce = jnp.max(jnp.abs(comp(xs) - exact(xs)))
+scale = jnp.max(jnp.abs(xs)) / 127 * 8
+results["compress_err_ratio"] = float(ce / scale)
+
+print("RESULTS " + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS ")][-1]
+    res = json.loads(line[len("RESULTS "):])
+    assert res["pagerank_max_err"] < 1e-3
+    assert res["labelprop_ok"]
+    assert res["moe_err"] == 0.0
+    assert res["ring_attn_err"] < 2e-6
+    assert res["train_loss_delta"] < 1e-3
+    assert res["train_params_delta"] < 2e-2  # bf16 params, reduction order
+    assert res["compress_err_ratio"] < 1.5
