@@ -5,17 +5,23 @@
 Prints ``name,seconds_or_value,derived`` CSV rows:
   table2.*   PageRank runtimes      (paper Table 2 / Figures 3-5)
   table3.*   label-prop runtimes    (paper Table 3 / Figures 6-8)
+  table4.*   SSSP runtimes          (weighted min-plus)
+  table5.*   BFS runtimes           (reachability depth)
+  table6.*   weighted-PageRank runtimes
   fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
   wire.*     analytic per-device wire bytes on the production mesh
   kernel.*   push-kernel reference timing + TPU cost model
   roofline.* dry-run roofline aggregates (reads experiments/dryrun/)
   cost.*     the COST verdict per algorithm
+
+The table/cost sections iterate the vertex-program registry; adding an
+algorithm in ``repro.core.programs`` adds its rows here with no harness
+changes.
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def emit(name, value, derived=""):
@@ -33,9 +39,11 @@ def main():
     repeats = 2 if args.quick else 3
 
     from benchmarks import kernelbench, roofline, tables
+    from repro.core import get_spec, registered_names
 
-    # ---- Tables 2/3 + Figures 1/2 -----------------------------------------
-    for algo, table in (("pagerank", "table2"), ("labelprop", "table3")):
+    # ---- Tables 2-6 + Figures 1/2 (one per registered program) ------------
+    for algo in registered_names():
+        table = get_spec(algo).table
         rows = tables.run_table(algo, scale_log2=scale, repeats=repeats)
         serial = {g: t for g, impl, p, t, ok in rows if impl == "serial"}
         best_actor = {}

@@ -1,24 +1,32 @@
-"""Paper Tables 2 & 3: best runtime per (graph x PE count), plus the serial
-baseline and the dataflow ("GraphX") stand-in -- scaled to this host.
+"""Paper Tables 2 & 3 (and their analogues for every registered vertex
+program): best runtime per (graph x PE count), plus the serial baseline and
+the dataflow ("GraphX") stand-in -- scaled to this host.
 
 On a single-core container the PE sweep that can be *measured* is PE=1 (the
 paper's own COST pivot point: does the parallel implementation on one PE
 beat the serial baseline?).  The multi-PE scaling column of the paper is
 covered by (a) the analytic wire model per variant (core.cost.wire_model)
 and (b) the multi-device engine correctness tests (tests/test_multidevice).
+
+The harness is registry-driven: ``run_table(algorithm)`` works for any
+program in ``repro.core.programs`` with zero per-algorithm branches here --
+graph preparation (symmetrize / attach weights), the serial reference, and
+the correctness predicate all come from the program's ``ProgramSpec``.
 """
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from benchmarks.graphx_analogue import (bench, labelprop_dataflow,
                                         pagerank_dataflow)
-from repro.configs.graphs import ALPHA, GRAPHS, PAGERANK_ITERS, VARIANTS
-from repro.core import (Engine, labelprop_serial, load_dataset,
-                        pagerank_serial, partition, wire_model)
+from repro.configs.graphs import GRAPHS, VARIANTS
+from repro.core import Engine, get_spec, load_dataset, partition, wire_model
+
+# Dataflow ("GraphX") stand-ins exist only for the paper's own two
+# algorithms; programs without one simply emit no dataflow row.
+DATAFLOW = {
+    "pagerank": lambda g, p: pagerank_dataflow(g, p["alpha"], p["iters"]),
+    "labelprop": lambda g, p: labelprop_dataflow(g, p["max_iters"]),
+}
 
 
 def run_table(algorithm: str, scale_log2: int = 13, repeats: int = 3,
@@ -26,38 +34,30 @@ def run_table(algorithm: str, scale_log2: int = 13, repeats: int = 3,
     """-> list of (graph, impl, pes, seconds, correct)."""
     import jax
 
+    spec = get_spec(algorithm)
+    params = dict(spec.defaults)
     rows = []
     max_pes = len(jax.devices())
     pe_counts = [p for p in pe_counts if p <= max_pes]
     for paper_name, (dskey, *_rest) in GRAPHS.items():
-        g = load_dataset(dskey, scale_log2=scale_log2)
-        if algorithm == "labelprop":
-            g = g.to_undirected()
-            serial_fn = lambda: labelprop_serial(g)
-            ref = labelprop_serial(g)[0]
-            flow_fn = lambda: labelprop_dataflow(g)
-        else:
-            serial_fn = lambda: pagerank_serial(g, ALPHA, PAGERANK_ITERS)
-            ref = pagerank_serial(g, ALPHA, PAGERANK_ITERS)
-            flow_fn = lambda: pagerank_dataflow(g, ALPHA, PAGERANK_ITERS)
+        g = load_dataset(dskey, scale_log2=scale_log2, weighted=spec.weighted)
+        g = spec.prepare_graph(g)
+        ref = spec.run_serial(g)
 
-        t_serial = bench(serial_fn, repeats)
+        t_serial = bench(lambda: spec.serial(g, **params), repeats)
         rows.append((paper_name, "serial", 1, t_serial, True))
-        t_flow = bench(flow_fn, repeats)
-        rows.append((paper_name, "dataflow", 1, t_flow, True))
+        flow = DATAFLOW.get(algorithm)
+        if flow is not None:
+            t_flow = bench(lambda: flow(g, params), repeats)
+            rows.append((paper_name, "dataflow", 1, t_flow, True))
 
         for variant in VARIANTS:
             for pes in pe_counts:
                 pg = partition(g, pes)
                 eng = Engine(pg, strategy=variant)
-                if algorithm == "labelprop":
-                    run = lambda: eng.labelprop()
-                    out = eng.labelprop()[0]
-                    ok = bool(np.array_equal(out, ref))
-                else:
-                    run = lambda: eng.pagerank(ALPHA, PAGERANK_ITERS)
-                    out = eng.pagerank(ALPHA, PAGERANK_ITERS)
-                    ok = bool(np.max(np.abs(out - ref)) < 1e-3)
+                run = lambda: eng.run(algorithm, **params)
+                out, _ = run()
+                ok = spec.matches(out, ref)
                 rows.append((paper_name, variant, pes, bench(run, repeats), ok))
     return rows
 

@@ -1,4 +1,6 @@
-"""The paper's main experiment (Tables 2-3) at host scale: COST sweep.
+"""The paper's main experiment (Tables 2-3) at host scale: COST sweep,
+for every registered vertex program (PageRank, label propagation, SSSP,
+BFS, weighted PageRank -- or any subset).
 
     PYTHONPATH=src python examples/pagerank_cost.py [--pes 1 2 4] [--scale 12]
 
@@ -10,29 +12,29 @@ Multi-PE runs need forced host devices:
 import argparse
 
 from repro.configs.graphs import GRAPHS
-from repro.core import load_dataset, run_cost
+from repro.core import get_spec, load_dataset, registered_names, run_cost
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pes", type=int, nargs="+", default=[1])
     ap.add_argument("--scale", type=int, default=12)
-    ap.add_argument("--algorithm", choices=("pagerank", "labelprop", "both"),
-                    default="both")
+    ap.add_argument("--algorithm", nargs="+",
+                    choices=registered_names() + ["all"], default=["all"])
     args = ap.parse_args()
 
-    algos = ["pagerank", "labelprop"] if args.algorithm == "both" \
-        else [args.algorithm]
+    algos = registered_names() if "all" in args.algorithm else args.algorithm
     for paper_name, (dskey, V, E, pr_s, lp_s) in GRAPHS.items():
-        g = load_dataset(dskey, scale_log2=args.scale)
-        print(f"\n=== {paper_name} (scaled stand-in: |V|={g.num_vertices:,} "
-              f"|E|={g.num_edges:,}; paper: |V|={V:,} |E|={E:,}) ===")
+        print(f"\n=== {paper_name} (paper: |V|={V:,} |E|={E:,}; "
+              f"paper serial: pagerank={pr_s}s labelprop={lp_s}s) ===")
         for algo in algos:
-            graph = g.to_undirected() if algo == "labelprop" else g
-            rep = run_cost(graph, algorithm=algo, pe_counts=args.pes)
-            print(f"  {algo}: serial={rep.serial_s:.3f}s "
-                  f"(paper serial: {pr_s if algo == 'pagerank' else lp_s}s "
-                  f"at full scale)")
+            spec = get_spec(algo)
+            g = spec.prepare_graph(
+                load_dataset(dskey, scale_log2=args.scale,
+                             weighted=spec.weighted))
+            rep = run_cost(g, algorithm=algo, pe_counts=args.pes)
+            print(f"  {algo}: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
+                  f"serial={rep.serial_s:.3f}s")
             for strategy, pes, t in rep.rows():
                 if strategy == "serial":
                     continue

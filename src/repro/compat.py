@@ -1,0 +1,103 @@
+"""JAX version compatibility shims.
+
+The repo targets the newer JAX API surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``); CPU containers
+often ship an older 0.4.x where those live under ``jax.experimental`` or do
+not exist.  All call sites route through this module so the difference is
+absorbed exactly once.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # newer jax: explicit axis types on mesh creation
+    from jax.sharding import AxisType  # noqa: F401
+    _HAS_AXIS_TYPE = True
+except ImportError:
+    AxisType = None
+    _HAS_AXIS_TYPE = False
+
+
+def auto_axes(n: int):
+    """``axis_types`` tuple for an all-Auto mesh (None on old jax)."""
+    if not _HAS_AXIS_TYPE:
+        return None
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates old versions without axis_types."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPE and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+        # old name for the same knob: check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager form of ``jax.set_mesh`` with a Mesh-context fallback."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh  # jax.sharding.Mesh is itself a context manager
+    return contextlib.nullcontext(mesh)
+
+
+def get_abstract_mesh():
+    """Current mesh context (``jax.sharding.get_abstract_mesh`` on new jax,
+    the thread-resources physical mesh on old); None when unset/empty."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - private-API drift
+        return None
+
+
+def mesh_has_manual_axes(mesh) -> bool:
+    """True when any mesh axis is explicitly Manual (new jax only)."""
+    if not _HAS_AXIS_TYPE or not hasattr(mesh, "axis_types"):
+        return False
+    return any(t == AxisType.Manual for t in mesh.axis_types)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict: newer jax returns the
+    dict directly, 0.4.x wraps it in a one-element-per-partition list."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def in_manual_region() -> bool:
+    """True inside a shard_map/pmap body on old jax (bound axis names in the
+    axis env).  New jax reports this through the abstract mesh's Manual axis
+    types instead, so this returns False there."""
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        return bool(getattr(env, "axis_sizes", {}))
+    except Exception:
+        return False

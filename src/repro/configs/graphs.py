@@ -13,7 +13,8 @@ GRAPHS = {
     "uk-2007-05": ("uk-2007-mini", 105_896_555, 3_738_733_648, 83.62, 83.59),
 }
 
-ALGORITHMS = ("pagerank", "labelprop")
+# the algorithm suite is the vertex-program registry
+# (repro.core.programs.registered_names()), not a constant here
 VARIANTS = ("reduction", "sortdest", "basic", "pairs")
 PE_SWEEP = (1, 2, 4, 8, 16, 32, 64, 128)
 PAGERANK_ITERS = 20

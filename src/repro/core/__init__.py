@@ -3,15 +3,21 @@
 Public API:
     Graph / partition / generators          repro.core.graph
     Engine (strategy x vertex program)      repro.core.engine
+    VertexProgram / registry / run_parallel repro.core.programs
     pagerank_serial / pagerank_parallel     repro.core.pagerank
     labelprop_serial / labelprop_parallel   repro.core.labelprop
+    sssp_serial / bfs_serial / weighted PR  repro.core.programs
     run_cost / wire_model                   repro.core.cost
 """
 
 from repro.core.graph import (Graph, PartitionedGraph, from_edges, partition,
                               rmat, erdos_renyi, ring, two_cliques,
-                              load_dataset, dataset_names)
+                              random_weights, load_dataset, dataset_names)
 from repro.core.engine import Engine, make_pe_mesh
+from repro.core.programs import (VertexProgram, ProgramSpec, make_program,
+                                 get_spec, registered_names, run_parallel,
+                                 sssp_serial, bfs_serial,
+                                 pagerank_weighted_serial)
 from repro.core.pagerank import pagerank_serial, pagerank_parallel
 from repro.core.labelprop import (labelprop_serial, labelprop_parallel,
                                   components_oracle)

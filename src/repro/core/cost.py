@@ -19,10 +19,9 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core import programs as prog_mod
 from repro.core.engine import Engine
 from repro.core.graph import Graph, partition
-from repro.core import pagerank as pr
-from repro.core import labelprop as lp
 
 
 def _time(fn: Callable, repeats: int = 3) -> float:
@@ -50,29 +49,29 @@ class CostReport:
 
 def run_cost(graph: Graph, algorithm: str = "pagerank",
              strategies=("reduction", "sortdest", "basic", "pairs"),
-             pe_counts=(1, 2, 4, 8), alpha: float = 0.85, iters: int = 20,
-             repeats: int = 3) -> CostReport:
+             pe_counts=(1, 2, 4, 8), repeats: int = 3,
+             **algo_params) -> CostReport:
+    """COST sweep for any registered vertex program.
+
+    ``graph`` should already be in the shape the program expects (the caller
+    symmetrizes / attaches weights; ``ProgramSpec.prepare_graph`` helps).
+    Extra keyword args are forwarded to the program (e.g. ``source=0``).
+    """
     import jax
 
     max_pes = len(jax.devices())
     pe_counts = [p for p in pe_counts if p <= max_pes]
 
-    if algorithm == "pagerank":
-        serial = _time(lambda: pr.pagerank_serial(graph, alpha, iters), repeats)
-    elif algorithm == "labelprop":
-        serial = _time(lambda: lp.labelprop_serial(graph), repeats)
-    else:
-        raise ValueError(algorithm)
+    spec = prog_mod.get_spec(algorithm)
+    params = {**spec.defaults, **algo_params}
+    serial = _time(lambda: spec.serial(graph, **params), repeats)
 
     parallel = {}
     for strategy in strategies:
         for pes in pe_counts:
             pg = partition(graph, pes)
             eng = Engine(pg, strategy=strategy)
-            if algorithm == "pagerank":
-                run = lambda: eng.pagerank(alpha=alpha, iters=iters)
-            else:
-                run = lambda: eng.labelprop()
+            run = lambda: eng.run(algorithm, **params)
             run()  # compile outside the timed region (paper times compute only)
             parallel[(strategy, pes)] = _time(run, repeats)
 

@@ -8,18 +8,24 @@ engine jits ONE program containing the whole iteration loop, so XLA can
 overlap the aggregation of iteration i+1 with the tail of the collective of
 iteration i (the paper's "send early, let idle chares move on" -- see
 `strategies.pairs`).
+
+Algorithms are ``VertexProgram``s (see ``repro.core.programs``); the engine
+owns the shard_map plumbing, fori/while-loop selection, frontier masking,
+and the compile cache exactly once -- ``Engine.run(program)`` is the single
+entry point, with ``pagerank``/``labelprop``/``sssp``/``bfs`` as thin
+wrappers.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import strategies as strat
 from repro.core.graph import PartitionedGraph, build_pairwise
 
@@ -33,8 +39,8 @@ def make_pe_mesh(num_pes: int):
         raise ValueError(
             f"requested {num_pes} PEs but only {len(devs)} devices; "
             f"set XLA_FLAGS=--xla_force_host_platform_device_count for CPU runs")
-    return jax.make_mesh((num_pes,), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((num_pes,), (AXIS,),
+                            axis_types=compat.auto_axes(1))
 
 
 @dataclasses.dataclass
@@ -61,118 +67,134 @@ class Engine:
                 "pb_src_local": jnp.asarray(pw.pb_src_local),
                 "pb_dst_local": jnp.asarray(pw.pb_dst_local),
                 "pb_valid": jnp.asarray(pw.pb_valid),
+                "pb_weight": jnp.asarray(pw.pb_weight),
             }
         else:
             self.arrays = {
                 k: jnp.asarray(getattr(pg, k))
-                for k in ("src_local", "dst_global", "edge_valid",
-                          "sd_src_local", "sd_dst_global", "sd_edge_valid")
+                for k in ("src_local", "dst_global", "edge_valid", "edge_weight",
+                          "sd_src_local", "sd_dst_global", "sd_edge_valid",
+                          "sd_edge_weight")
             }
         self.aux = {
             "out_degree": jnp.asarray(pg.out_degree),
+            "out_weight": jnp.asarray(pg.out_weight),
             "vertex_valid": jnp.asarray(pg.vertex_valid),
         }
         self._fn = strat.STRATEGIES[self.strategy]
         self._C, self._K = pg.num_chunks, pg.chunk_size
-        self._compiled = {}  # (program, args) -> jitted fn; timing must not
+        self._compiled = {}  # program.key -> jitted fn; timing must not
         #                      rebuild the closure (COST times compute only)
 
     # -- shard_map plumbing -------------------------------------------------
 
-    def _smap(self, body, n_state_out=1):
+    def _smap(self, body):
         arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
                      for k, v in self.arrays.items()}
         aux_specs = {k: P(AXIS, None) for k in self.aux}
-        out_specs = tuple([P(AXIS, None)] * n_state_out)
-        if n_state_out == 1:
-            out_specs = P(AXIS, None)
-        return jax.shard_map(body, mesh=self.mesh,
-                             in_specs=(arr_specs, aux_specs, P(AXIS, None)),
-                             out_specs=out_specs, check_vma=False)
+        return compat.shard_map(body, mesh=self.mesh,
+                                in_specs=(arr_specs, aux_specs, P(AXIS, None)),
+                                out_specs=(P(AXIS, None), P(AXIS, None)),
+                                check_vma=False)
 
-    def _propagate(self, vals, arrs, combiner):
+    def _propagate(self, vals, arrs, combiner, edge_value=None):
         return self._fn(vals, arrs, combiner, self._C, self._K,
-                        segment_fn=self.segment_fn)
+                        segment_fn=self.segment_fn, edge_value=edge_value)
 
-    # -- PageRank (Listing 2) -------------------------------------------------
+    # -- the one superstep loop ---------------------------------------------
+
+    def _make_body(self, program):
+        """Per-shard body: the whole iteration loop of one vertex program.
+
+        Fixed-iteration programs (PageRank) compile to ``fori_loop``;
+        convergence programs (label propagation, SSSP, BFS) compile to
+        ``while_loop`` with frontier masking -- vertices whose state did not
+        change last superstep send the combiner identity, preserving the
+        paper's "only send labels that changed" work skipping under XLA's
+        static shapes (see DESIGN.md "Dynamic message sizes").
+        """
+        comb = program.combiner
+
+        def body(arrs, aux, s0):
+            arrs = {k: v[0] for k, v in arrs.items()}
+            aux = {k: v[0] for k, v in aux.items()}
+
+            def superstep(state, vals):
+                incoming = self._propagate(vals, arrs, comb, program.edge_value)
+                return program.apply(state, incoming, aux)
+
+            if program.fixed_iters is not None:
+                final = jax.lax.fori_loop(
+                    0, program.fixed_iters,
+                    lambda _, s: superstep(s, program.update(s, aux)), s0[0])
+                iters = jnp.asarray(program.fixed_iters, jnp.int32)
+            else:
+                sent = jnp.asarray(comb.identity, s0.dtype)
+
+                def cond(carry):
+                    _, _, changed, it = carry
+                    return jnp.logical_and(changed, it < program.max_iters)
+
+                def step(carry):
+                    state, frontier, _, it = carry
+                    # frontier masking: quiesced vertices send the identity
+                    vals = jnp.where(frontier, program.update(state, aux), sent)
+                    new = superstep(state, vals)
+                    delta = new != state
+                    changed = jax.lax.psum(
+                        delta.any().astype(jnp.int32), AXIS) > 0
+                    return new, delta, changed, it + 1
+
+                final, _, _, iters = jax.lax.while_loop(
+                    cond, step, (s0[0], jnp.ones((self._K,), bool),
+                                 jnp.asarray(True), jnp.asarray(0)))
+            return final[None], jnp.full((1, self._K), iters, jnp.int32)
+
+        return body
+
+    def run(self, program, **params) -> tuple[np.ndarray, int]:
+        """Run a vertex program to completion; returns (state, iterations).
+
+        ``program`` is a registered name (params forwarded to its factory)
+        or a ``VertexProgram`` instance.
+        """
+        from repro.core import programs as prog_mod
+
+        if isinstance(program, str):
+            program = prog_mod.make_program(program, **params)
+        elif params:
+            raise TypeError("params only apply to registered program names")
+
+        s0 = jnp.asarray(program.init(self.pg))
+        fn = self._compiled.get(program.key)
+        if fn is None:
+            fn = jax.jit(self._smap(self._make_body(program)))
+            self._compiled[program.key] = fn
+        state, iters = fn(self.arrays, self.aux, s0)
+        state = jax.device_get(state).reshape(-1)[: self.pg.graph.num_vertices]
+        return state, int(jax.device_get(iters)[0, 0])
+
+    # -- thin per-algorithm wrappers ----------------------------------------
 
     def pagerank(self, alpha: float = 0.85, iters: int = 20) -> np.ndarray:
         """Push PageRank: a <- (1-alpha) + sum_in alpha * a_prev / d."""
-        key = ("pagerank", alpha, iters)
-        if key in self._compiled:
-            out = jax.device_get(self._compiled[key](
-                self.arrays, self.aux,
-                jnp.zeros((self._C, self._K), jnp.float32)))
-            return out.reshape(-1)[: self.pg.graph.num_vertices]
-
-        def body(arrs, aux, a0):
-            arrs = {k: v[0] for k, v in arrs.items()}
-            deg = aux["out_degree"][0].astype(jnp.float32)
-            valid = aux["vertex_valid"][0].astype(jnp.float32)
-
-            def one_iter(_, a):
-                b = alpha * a / deg  # update()
-                incoming = self._propagate(b, arrs, strat.ADD)  # iterate()+addB()
-                return (1.0 - alpha + incoming) * valid
-
-            return jax.lax.fori_loop(0, iters, one_iter, a0[0])[None]
-
-        a0 = jnp.zeros((self._C, self._K), jnp.float32)
-        fn = jax.jit(self._smap(body))
-        self._compiled[key] = fn
-        out = jax.device_get(fn(self.arrays, self.aux, a0))
-        return out.reshape(-1)[: self.pg.graph.num_vertices]
-
-    # -- Label propagation ---------------------------------------------------
+        return self.run("pagerank", alpha=alpha, iters=iters)[0]
 
     def labelprop(self, max_iters: int = 10_000) -> tuple[np.ndarray, int]:
-        """Min-label propagation to convergence. Returns (labels, iterations).
+        """Min-label propagation to convergence. Returns (labels, iterations)."""
+        return self.run("labelprop", max_iters=max_iters)
 
-        The paper's frontier optimization (only send labels that changed) is
-        expressed as masking: unchanged vertices contribute the identity, so
-        the *work* skipping is preserved even though XLA's static shapes keep
-        the buffer sizes fixed (see DESIGN.md "Dynamic message sizes").
-        """
-        C, K = self._C, self._K
-        sent = strat.MIN.identity
-        key = ("labelprop", max_iters)
-        if key in self._compiled:
-            fn = self._compiled[key]
-            base = np.arange(C * K, dtype=np.int32).reshape(C, K)
-            l0 = jnp.asarray(
-                np.where(self.pg.vertex_valid > 0, base, sent).astype(np.int32))
-            labels, iters = fn(self.arrays, self.aux, l0)
-            labels = jax.device_get(labels).reshape(-1)[
-                : self.pg.graph.num_vertices]
-            return labels, int(jax.device_get(iters)[0, 0])
+    def sssp(self, source: int = 0, max_iters: int = 10_000
+             ) -> tuple[np.ndarray, int]:
+        """Single-source shortest paths (min-plus over edge weights)."""
+        return self.run("sssp", source=source, max_iters=max_iters)
 
-        def body(arrs, aux, l0):
-            arrs = {k: v[0] for k, v in arrs.items()}
+    def bfs(self, source: int = 0, max_iters: int = 10_000
+            ) -> tuple[np.ndarray, int]:
+        """BFS reachability depth (min over hop counts)."""
+        return self.run("bfs", source=source, max_iters=max_iters)
 
-            def cond(carry):
-                _, _, changed, it = carry
-                return jnp.logical_and(changed, it < max_iters)
-
-            def step(carry):
-                l, frontier, _, it = carry
-                # frontier masking: quiesced vertices send the identity
-                vals = jnp.where(frontier, l, sent)
-                incoming = self._propagate(vals, arrs, strat.MIN)
-                new = jnp.minimum(l, incoming)
-                delta = new != l
-                changed = jax.lax.psum(delta.any().astype(jnp.int32), AXIS) > 0
-                return new, delta, changed, it + 1
-
-            l, frontier = l0[0], jnp.ones((K,), bool)
-            l, _, _, iters = jax.lax.while_loop(
-                cond, step, (l, frontier, jnp.asarray(True), jnp.asarray(0)))
-            return l[None], jnp.full((1, K), iters, jnp.int32)
-
-        base = np.arange(C * K, dtype=np.int32).reshape(C, K)
-        l0 = jnp.asarray(
-            np.where(self.pg.vertex_valid > 0, base, sent).astype(np.int32))
-        fn = jax.jit(self._smap(body, n_state_out=2))
-        self._compiled[key] = fn
-        labels, iters = fn(self.arrays, self.aux, l0)
-        labels = jax.device_get(labels).reshape(-1)[: self.pg.graph.num_vertices]
-        return labels, int(jax.device_get(iters)[0, 0])
+    def pagerank_weighted(self, alpha: float = 0.85, iters: int = 20
+                          ) -> np.ndarray:
+        """Weight-normalized push PageRank."""
+        return self.run("pagerank_weighted", alpha=alpha, iters=iters)[0]

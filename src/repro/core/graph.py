@@ -15,21 +15,27 @@ load-imbalance observations.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import numpy as np
 
 INT = np.int32
+WEIGHT = np.float32
 
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Global CSR graph: ``dst[indptr[v]:indptr[v+1]]`` are v's out-neighbors."""
+    """Global CSR graph: ``dst[indptr[v]:indptr[v+1]]`` are v's out-neighbors.
+
+    ``weight`` (optional) is aligned with ``dst``: ``weight[e]`` is the weight
+    of edge e in CSR order.  ``None`` means unweighted; consumers that need
+    weights use ``edge_weights`` which substitutes ones.
+    """
 
     num_vertices: int
     indptr: np.ndarray  # [V+1] int64
     dst: np.ndarray  # [E] int32
     directed: bool = True
+    weight: np.ndarray | None = None  # [E] float32 or None
 
     @property
     def num_edges(self) -> int:
@@ -46,27 +52,69 @@ class Graph:
             np.arange(self.num_vertices, dtype=INT), self.out_degrees
         )
 
+    @property
+    def edge_weights(self) -> np.ndarray:
+        """Weights in CSR edge order; ones when unweighted."""
+        if self.weight is None:
+            return np.ones(self.num_edges, dtype=WEIGHT)
+        return self.weight
+
+    def with_weight(self, weight: np.ndarray) -> "Graph":
+        """Attach a per-edge weight array (CSR edge order)."""
+        weight = np.asarray(weight, dtype=WEIGHT)
+        if weight.shape != (self.num_edges,):
+            raise ValueError(f"weight shape {weight.shape} != ({self.num_edges},)")
+        return dataclasses.replace(self, weight=weight)
+
     def to_undirected(self) -> "Graph":
-        """Add reverse edges (dedup), as the paper does for label propagation."""
+        """Add reverse edges (dedup), as the paper does for label propagation.
+
+        For weighted graphs the dedup keeps the *minimum* weight per
+        (u, v) pair -- the convention that preserves shortest paths.
+        """
         src, dst = self.src, self.dst
         fwd = src.astype(np.int64) * self.num_vertices + dst
         rev = dst.astype(np.int64) * self.num_vertices + src
-        keys = np.unique(np.concatenate([fwd, rev]))
+        if self.weight is None:
+            keys = np.unique(np.concatenate([fwd, rev]))
+            w = None
+        else:
+            both = np.concatenate([fwd, rev])
+            wboth = np.concatenate([self.weight, self.weight])
+            order = np.argsort(both, kind="stable")
+            both, wboth = both[order], wboth[order]
+            first = np.ones(len(both), dtype=bool)
+            first[1:] = both[1:] != both[:-1]
+            keys = both[first]
+            w = np.minimum.reduceat(wboth, np.flatnonzero(first))
         u = (keys // self.num_vertices).astype(INT)
         v = (keys % self.num_vertices).astype(INT)
-        return from_edges(self.num_vertices, u, v, directed=False)
+        return from_edges(self.num_vertices, u, v, directed=False, weight=w)
 
 
-def from_edges(n: int, src: np.ndarray, dst: np.ndarray, directed=True) -> Graph:
+def from_edges(n: int, src: np.ndarray, dst: np.ndarray, directed=True,
+               weight: np.ndarray | None = None) -> Graph:
     """Build CSR from a COO edge list (sorts by src, keeps duplicates)."""
     src = np.asarray(src, dtype=INT)
     dst = np.asarray(dst, dtype=INT)
     order = np.argsort(src, kind="stable")
     src, dst = src[order], dst[order]
+    if weight is not None:
+        weight = np.asarray(weight, dtype=WEIGHT)[order]
     counts = np.bincount(src, minlength=n)
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(counts, out=indptr[1:])
-    return Graph(num_vertices=n, indptr=indptr, dst=dst, directed=directed)
+    return Graph(num_vertices=n, indptr=indptr, dst=dst, directed=directed,
+                 weight=weight)
+
+
+def random_weights(graph: Graph, seed: int = 0, low: float = 1.0,
+                   high: float = 10.0) -> Graph:
+    """Attach uniform random weights in [low, high) -- the stand-in for the
+    paper datasets' (absent) edge metadata in weighted scenarios."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(low, high, size=graph.num_edges).astype(WEIGHT)
+    return graph.with_weight(w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +137,12 @@ class PartitionedGraph:
       * ``sd_src_local``  [C, Emax]
       * ``sd_dst_global`` [C, Emax]
       * ``sd_edge_valid`` [C, Emax]
+
+    Both layouts carry an aligned per-edge weight plane (``edge_weight`` /
+    ``sd_edge_weight``, ones when the graph is unweighted) so strategies can
+    apply a program's ``edge_value(v, w)`` transform before combining.
+    ``out_weight`` is the per-vertex sum of outgoing weights (1 where the
+    vertex has no out-edges, mirroring the ``out_degree`` div-0 clip).
     """
 
     graph: Graph
@@ -96,12 +150,15 @@ class PartitionedGraph:
     chunk_size: int  # padded vertices per chunk
     vertex_valid: np.ndarray  # [C, chunk_size] 0/1
     out_degree: np.ndarray  # [C, chunk_size] int32 (>=1 to avoid div0; masked)
+    out_weight: np.ndarray  # [C, chunk_size] float32 (>=1 where no out-edges)
     src_local: np.ndarray
     dst_global: np.ndarray
     edge_valid: np.ndarray
+    edge_weight: np.ndarray
     sd_src_local: np.ndarray
     sd_dst_global: np.ndarray
     sd_edge_valid: np.ndarray
+    sd_edge_weight: np.ndarray
 
     @property
     def padded_vertices(self) -> int:
@@ -118,12 +175,16 @@ def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
     padded = num_chunks * chunk_size
 
     src, dst = graph.src, graph.dst
+    wgt = graph.edge_weights
     owner = src // chunk_size
 
     deg = np.ones(padded, dtype=INT)  # 1 for padding (avoids div-by-zero)
     deg[:n] = np.maximum(graph.out_degrees, 1)
     vertex_valid = np.zeros(padded, dtype=INT)
     vertex_valid[:n] = 1
+    wsum = np.bincount(src, weights=wgt, minlength=n).astype(WEIGHT)
+    out_weight = np.ones(padded, dtype=WEIGHT)
+    out_weight[:n] = np.where(wsum > 0, wsum, 1.0)
 
     per_chunk_e = np.bincount(owner, minlength=num_chunks)
     emax = int(per_chunk_e.max()) if len(src) else 1
@@ -134,6 +195,7 @@ def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
         s = np.full((num_chunks, emax), 0, dtype=INT)
         d = np.full((num_chunks, emax), 0, dtype=INT)
         m = np.zeros((num_chunks, emax), dtype=INT)
+        w = np.ones((num_chunks, emax), dtype=WEIGHT)
         for c in range(num_chunks):
             sel = np.flatnonzero(owner == c)
             if order_key is not None and len(sel):
@@ -142,13 +204,14 @@ def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
             s[c, :k] = src[sel] - c * chunk_size
             d[c, :k] = dst[sel]
             m[c, :k] = 1
-        return s, d, m
+            w[c, :k] = wgt[sel]
+        return s, d, m, w
 
     # basic: keep CSR (local-source) order within the chunk
-    b_s, b_d, b_m = _layout(None)
+    b_s, b_d, b_m, b_w = _layout(None)
     # sort-destination: order by (dest chunk, dest vertex)
     sd_key = lambda sel: (dst[sel], dst[sel] // chunk_size)
-    sd_s, sd_d, sd_m = _layout(sd_key)
+    sd_s, sd_d, sd_m, sd_w = _layout(sd_key)
 
     return PartitionedGraph(
         graph=graph,
@@ -156,12 +219,15 @@ def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
         chunk_size=chunk_size,
         vertex_valid=vertex_valid.reshape(num_chunks, chunk_size),
         out_degree=deg.reshape(num_chunks, chunk_size),
+        out_weight=out_weight.reshape(num_chunks, chunk_size),
         src_local=b_s,
         dst_global=b_d,
         edge_valid=b_m,
+        edge_weight=b_w,
         sd_src_local=sd_s,
         sd_dst_global=sd_d,
         sd_edge_valid=sd_m,
+        sd_edge_weight=sd_w,
     )
 
 
@@ -178,10 +244,12 @@ class PairwiseLayout:
     pb_src_local: np.ndarray
     pb_dst_local: np.ndarray
     pb_valid: np.ndarray
+    pb_weight: np.ndarray
 
 
 def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
     src, dst = pg.graph.src, pg.graph.dst
+    wgt = pg.graph.edge_weights
     K, C = pg.chunk_size, pg.num_chunks
     sc = src // K
     dc = dst // K
@@ -191,6 +259,7 @@ def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
     s = np.zeros((C, C, pmax), dtype=INT)
     d = np.zeros((C, C, pmax), dtype=INT)
     m = np.zeros((C, C, pmax), dtype=INT)
+    w = np.ones((C, C, pmax), dtype=WEIGHT)
     for c in range(C):
         for k in range(C):
             sel = np.flatnonzero((sc == c) & (dc == k))
@@ -198,8 +267,9 @@ def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
             s[c, k, :n] = src[sel] - c * K
             d[c, k, :n] = dst[sel] - k * K
             m[c, k, :n] = 1
+            w[c, k, :n] = wgt[sel]
     return PairwiseLayout(pair_max=pmax, pb_src_local=s, pb_dst_local=d,
-                          pb_valid=m)
+                          pb_valid=m, pb_weight=w)
 
 
 # ---------------------------------------------------------------------------
@@ -207,12 +277,13 @@ def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
 # ---------------------------------------------------------------------------
 
 
-def ring(n: int) -> Graph:
+def ring(n: int, weighted: bool = False, weight_seed: int = 0) -> Graph:
     v = np.arange(n, dtype=INT)
-    return from_edges(n, v, (v + 1) % n)
+    g = from_edges(n, v, (v + 1) % n)
+    return random_weights(g, seed=weight_seed) if weighted else g
 
 
-def two_cliques(n: int) -> Graph:
+def two_cliques(n: int, weighted: bool = False, weight_seed: int = 0) -> Graph:
     """Two disjoint cliques of size n//2 -- a labelprop ground-truth fixture."""
     half = n // 2
     src, dst = [], []
@@ -222,19 +293,22 @@ def two_cliques(n: int) -> Graph:
                 if i != j:
                     src.append(base + i)
                     dst.append(base + j)
-    return from_edges(n, np.array(src), np.array(dst))
+    g = from_edges(n, np.array(src), np.array(dst))
+    return random_weights(g, seed=weight_seed) if weighted else g
 
 
-def erdos_renyi(n: int, num_edges: int, seed: int = 0) -> Graph:
+def erdos_renyi(n: int, num_edges: int, seed: int = 0,
+                weighted: bool = False) -> Graph:
     rng = np.random.default_rng(seed)
     src = rng.integers(0, n, size=num_edges, dtype=INT)
     dst = rng.integers(0, n, size=num_edges, dtype=INT)
     keep = src != dst
-    return from_edges(n, src[keep], dst[keep])
+    g = from_edges(n, src[keep], dst[keep])
+    return random_weights(g, seed=seed) if weighted else g
 
 
 def rmat(n_log2: int, num_edges: int, seed: int = 0,
-         a=0.57, b=0.19, c=0.19) -> Graph:
+         a=0.57, b=0.19, c=0.19, weighted: bool = False) -> Graph:
     """RMAT power-law generator (Graph500-style), vectorized."""
     rng = np.random.default_rng(seed)
     n = 1 << n_log2
@@ -248,7 +322,8 @@ def rmat(n_log2: int, num_edges: int, seed: int = 0,
         p_right = np.where(r >= a + b, c / (c + (1 - a - b - c)), b / (a + b))
         dst = dst * 2 + (r2 < p_right)
     keep = src != dst
-    return from_edges(n, src[keep].astype(INT), dst[keep].astype(INT))
+    g = from_edges(n, src[keep].astype(INT), dst[keep].astype(INT))
+    return random_weights(g, seed=seed) if weighted else g
 
 
 # Scaled stand-ins for the paper's datasets (same E/V ratio, power-law skew).
@@ -260,11 +335,12 @@ _DATASETS = {
 }
 
 
-def load_dataset(name: str, scale_log2: int | None = None, seed: int = 1) -> Graph:
+def load_dataset(name: str, scale_log2: int | None = None, seed: int = 1,
+                 weighted: bool = False) -> Graph:
     n_log2, mult = _DATASETS[name]
     if scale_log2 is not None:
         n_log2 = scale_log2
-    return rmat(n_log2, (1 << n_log2) * mult, seed=seed)
+    return rmat(n_log2, (1 << n_log2) * mult, seed=seed, weighted=weighted)
 
 
 def dataset_names():

@@ -24,7 +24,6 @@ All functions run *inside* ``shard_map`` over axis ``"pe"``.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
@@ -58,10 +57,40 @@ MIN = Combiner(
     segment=lambda d, i, n: jax.ops.segment_min(d, i, num_segments=n),
     merge=jnp.minimum,
 )
+# float-valued min (SSSP distances): same monoid, +inf identity so padded
+# edges and quiesced vertices stay "unreached" rather than int-sentinel-large
+FMIN = Combiner(
+    "min", float("inf"),
+    segment=lambda d, i, n: jax.ops.segment_min(d, i, num_segments=n),
+    merge=jnp.minimum,
+)
 
 
-def _dense_contrib(vals, src_local, dst_global, edge_valid, combiner, num_chunks,
-                   chunk_size, segment_fn=None):
+def _edge_transform(vals_at_src, weights, edge_value):
+    """Apply a vertex program's per-edge transform ``edge_value(v, w)``.
+
+    ``None`` means the raw vertex value goes on the edge (the pre-weighted
+    behavior); combiner masking happens *after* the transform, so padded
+    edges are immune to whatever the transform does with the padding weight.
+    """
+    if edge_value is None:
+        return vals_at_src
+    return edge_value(vals_at_src, weights)
+
+
+def _segment(combiner, segment_fn, data, seg_ids, num_segments):
+    """Apply the local combine: the combiner's own segment op, or an external
+    hook (Pallas kernel).  Hooks receive the active monoid via the
+    ``combine`` keyword -- dtype inference cannot distinguish float-add
+    (PageRank) from float-min (SSSP)."""
+    if segment_fn is None:
+        return combiner.segment(data, seg_ids, num_segments)
+    return segment_fn(data, seg_ids, num_segments, combine=combiner.name)
+
+
+def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
+                   combiner, num_chunks, chunk_size, segment_fn=None,
+                   edge_value=None):
     """Local per-destination combine into a dense [C*K] buffer.
 
     This is the aggregation loop of Listing 2's ``iterate()``; with the
@@ -69,9 +98,10 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, combiner, num_chunks
     "combine updates to one external vertex before sending" locally (adjacent
     segment entries), which is what makes the compact per-chunk send legal.
     """
-    contrib = combiner.mask(vals[src_local], edge_valid)
-    segment = segment_fn or combiner.segment
-    return segment(contrib, dst_global, num_chunks * chunk_size)
+    contrib = _edge_transform(vals[src_local], edge_weight, edge_value)
+    contrib = combiner.mask(contrib, edge_valid)
+    return _segment(combiner, segment_fn, contrib, dst_global,
+                    num_chunks * chunk_size)
 
 
 # --------------------------------------------------------------------------
@@ -79,7 +109,8 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, combiner, num_chunks
 # --------------------------------------------------------------------------
 
 
-def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+              edge_value=None):
     """Paper's *reduction* variant: dense |V| buffer + all-reduce.
 
     Every chare contributes a buffer of size |V|; the reduction tree combines
@@ -87,8 +118,9 @@ def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None
     ring: ~2 * |V| -- twice sortdest, and memory is |V| *per chare*.
     """
     dense = _dense_contrib(vals, pg_arrays["src_local"], pg_arrays["dst_global"],
-                           pg_arrays["edge_valid"], combiner, num_chunks,
-                           chunk_size, segment_fn)
+                           pg_arrays["edge_valid"], pg_arrays["edge_weight"],
+                           combiner, num_chunks, chunk_size, segment_fn,
+                           edge_value)
     if combiner.name == "add":
         full = jax.lax.psum(dense, AXIS)
     else:
@@ -97,7 +129,8 @@ def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None
     return jax.lax.dynamic_slice_in_dim(full, me * chunk_size, chunk_size)
 
 
-def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+             edge_value=None):
     """Paper's *sort destination* variant (its best performer).
 
     Edges are stored sorted by destination chunk; contributions to one
@@ -111,7 +144,8 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None)
     """
     dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
                            pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
-                           combiner, num_chunks, chunk_size, segment_fn)
+                           pg_arrays["sd_edge_weight"], combiner, num_chunks,
+                           chunk_size, segment_fn, edge_value)
     if combiner.name == "add":
         return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
     blocks = dense.reshape(num_chunks, chunk_size)
@@ -120,7 +154,8 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None)
                           combiner.merge, (0,))
 
 
-def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+          edge_value=None):
     """Paper's *basic* variant: point-to-point (dst, value) pair messages.
 
     No local combining: one (dst_local, value) pair per edge is bucketed by
@@ -133,16 +168,18 @@ def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
     src_l = pw_arrays["pb_src_local"]  # [C, Pmax]
     dst_l = pw_arrays["pb_dst_local"]
     valid = pw_arrays["pb_valid"]
-    payload = combiner.mask(vals[src_l], valid)
+    payload = _edge_transform(vals[src_l], pw_arrays["pb_weight"], edge_value)
+    payload = combiner.mask(payload, valid)
     got_vals = jax.lax.all_to_all(payload, AXIS, 0, 0, tiled=True)
     got_dst = jax.lax.all_to_all(dst_l, AXIS, 0, 0, tiled=True)
     got_valid = jax.lax.all_to_all(valid, AXIS, 0, 0, tiled=True)
     got_vals = combiner.mask(got_vals, got_valid)
-    segment = segment_fn or combiner.segment
-    return segment(got_vals.ravel(), got_dst.ravel(), chunk_size)
+    return _segment(combiner, segment_fn, got_vals.ravel(), got_dst.ravel(),
+                    chunk_size)
 
 
-def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
+def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+          edge_value=None):
     """Paper's *pairs* variant: one buffer per ordered chare pair, no global
     synchronization.  TPU-native form: a ring of ``ppermute`` hops where each
     shard forwards a partially-combined block and folds in its own
@@ -153,7 +190,8 @@ def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None):
     """
     dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
                            pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
-                           combiner, num_chunks, chunk_size, segment_fn)
+                           pg_arrays["sd_edge_weight"], combiner, num_chunks,
+                           chunk_size, segment_fn, edge_value)
     blocks = dense.reshape(num_chunks, chunk_size)
     me = jax.lax.axis_index(AXIS)
     perm = [(k, (k + 1) % num_chunks) for k in range(num_chunks)]

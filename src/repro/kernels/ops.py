@@ -29,12 +29,40 @@ def _pad_to(x, mult, fill):
     return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
 
 
+def _sat_add(c, w):
+    """Saturating add for the min semiring: never wraps past the sentinel.
+
+    Ints clamp the (non-negative) weight to the headroom below SENTINEL --
+    computed in int32 since x64 may be disabled; floats ride on inf
+    arithmetic (>= SENTINEL is "unreached" either way).
+    """
+    w = w.astype(c.dtype)
+    if jnp.issubdtype(c.dtype, jnp.floating):
+        return c + w
+    return c + jnp.minimum(w, push_min.SENTINEL - c)
+
+
+def _min_restore_identity(out):
+    """Map sentinel-range float results back to +inf (the FMIN identity).
+
+    The min kernels fill empty/masked lanes with the int32 sentinel, which a
+    float buffer stores as ~2.15e9; callers expect unreached == +inf."""
+    if jnp.issubdtype(out.dtype, jnp.floating):
+        return jnp.where(out >= push_min.SENTINEL, jnp.inf, out)
+    return out
+
+
 @partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
-def push(vals, src, dst, valid, num_segments, combine="add",
+def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
          interpret=not _ON_TPU):
-    """out[s] = combine_{e: dst[e]==s, valid[e]==1} vals[src[e]].
+    """out[s] = combine_{e: dst[e]==s, valid[e]==1} edge_value(vals[src[e]]).
 
     The paper's per-chare hot loop; arbitrary (unpadded) shapes accepted.
+    ``weight`` (optional, per-edge) applies the semiring edge transform
+    between the gather and scatter halves: ``c * w`` for the add monoid,
+    saturating ``c + w`` for min -- the same ``edge_value`` hook the dense
+    strategies expose (see repro.core.programs).  Float min treats values
+    at/above the int32 sentinel as unreached and returns them as +inf.
     """
     identity = 0 if combine == "add" else push_min.SENTINEL
     vals_p = _pad_to(vals, BLOCK_V, identity)
@@ -44,11 +72,19 @@ def push(vals, src, dst, valid, num_segments, combine="add",
     nseg_p = num_segments + ((-num_segments) % BLOCK_S)
     if combine == "add":
         c = push_sum.gather_sum(src_p, valid_p, vals_p, interpret=interpret)
+        if weight is not None:
+            c = c * _pad_to(weight, BLOCK_E, 1).astype(c.dtype)
         out = push_sum.scatter_sum(dst_p, c, nseg_p, interpret=interpret)
         return out[:num_segments].astype(vals.dtype)
+    if jnp.issubdtype(vals_p.dtype, jnp.floating):
+        # inf -> sentinel so the kernel's int-sentinel fills and masks compare
+        # consistently; restored to inf on the way out
+        vals_p = jnp.minimum(vals_p, push_min.SENTINEL)
     c = push_min.gather_min(src_p, valid_p, vals_p, interpret=interpret)
+    if weight is not None:
+        c = _sat_add(c, _pad_to(weight, BLOCK_E, 0))
     out = push_min.scatter_min(dst_p, c, nseg_p, interpret=interpret)
-    return out[:num_segments]
+    return _min_restore_identity(out[:num_segments])
 
 
 @partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
@@ -63,17 +99,28 @@ def segment_reduce(data, seg_ids, num_segments, combine="add",
         out = push_sum.scatter_sum(seg_p, data_p.astype(jnp.float32), nseg_p,
                                    interpret=interpret)
         return out[:num_segments].astype(data.dtype)
+    if jnp.issubdtype(data_p.dtype, jnp.floating):
+        data_p = jnp.minimum(data_p, push_min.SENTINEL)  # +inf -> sentinel
     out = push_min.scatter_min(seg_p, data_p, nseg_p, interpret=interpret)
-    return out[:num_segments]
+    return _min_restore_identity(out[:num_segments])
 
 
-def make_segment_fn(interpret=not _ON_TPU):
+def make_segment_fn(interpret=not _ON_TPU, combine=None):
     """Adapter for ``Engine(segment_fn=...)``: routes the local combines of
     any strategy through the Pallas kernels (the paper's 'atomic'-style
-    shared-buffer update, done TPU-natively)."""
+    shared-buffer update, done TPU-natively).
 
-    def fn(data, seg_ids, num_segments):
-        combine = "add" if jnp.issubdtype(data.dtype, jnp.floating) else "min"
+    The strategies pass the active program's monoid via the ``combine``
+    keyword (the segment_fn contract), so one hook serves PageRank (add),
+    labelprop (int min), and SSSP (float min) alike.  The ``combine``
+    constructor arg forces a fixed monoid; otherwise a call without the
+    keyword falls back to dtype inference (float -> add, int -> min).
+    """
+
+    def fn(data, seg_ids, num_segments, combine=combine):
+        if combine is None:
+            combine = ("add" if jnp.issubdtype(data.dtype, jnp.floating)
+                       else "min")
         return segment_reduce(data, seg_ids, num_segments, combine=combine,
                               interpret=interpret)
 

@@ -26,9 +26,25 @@ def scatter_min_ref(dst, c, num_segments):
     return jax.ops.segment_min(c, dst, num_segments=num_segments)
 
 
-def push_ref(vals, src, dst, valid, num_segments, combine="add"):
-    """Full hot loop: out[s] = combine_{e: dst[e]==s, valid[e]} vals[src[e]]."""
+def push_ref(vals, src, dst, valid, num_segments, combine="add", weight=None):
+    """Full hot loop: out[s] = combine_{e: dst[e]==s, valid[e]} ev(vals[src[e]])
+    where the optional per-edge ``weight`` applies the semiring transform
+    (``* w`` for add, sentinel-saturating ``+ w`` for min).  Float min maps
+    sentinel-range results back to +inf, matching ``ops.push``."""
     if combine == "add":
-        return scatter_sum_ref(dst, gather_sum_ref(src, valid, vals),
-                               num_segments).astype(vals.dtype)
-    return scatter_min_ref(dst, gather_min_ref(src, valid, vals), num_segments)
+        c = gather_sum_ref(src, valid, vals)
+        if weight is not None:
+            c = c * weight.astype(c.dtype)
+        return scatter_sum_ref(dst, c, num_segments).astype(vals.dtype)
+    c = gather_min_ref(src, valid, vals)
+    floating = jnp.issubdtype(c.dtype, jnp.floating)
+    if weight is not None:
+        w = weight.astype(c.dtype)
+        if floating:
+            c = c + w
+        else:
+            c = c + jnp.minimum(w, SENTINEL - c)  # int32-safe saturation
+    out = scatter_min_ref(dst, c, num_segments)
+    if floating:
+        out = jnp.where(out >= SENTINEL, jnp.inf, out)
+    return out

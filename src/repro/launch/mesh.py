@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 # TPU v5e hardware constants used by the roofline (EXPERIMENTS.md).
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip
@@ -24,15 +26,14 @@ ICI_BW = 50e9                 # bytes/s per link (per direction)
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axes(len(axes)))
 
 
 def make_host_mesh(num_devices: int | None = None, name: str = "data"):
     """1-D mesh over whatever devices exist (examples / tests)."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), (name,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (name,), axis_types=compat.auto_axes(1))
 
 
 def mesh_chips(mesh) -> int:

@@ -18,6 +18,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 PDT = jnp.bfloat16  # parameter/activation dtype
 
 NEG_INF = -1e30
@@ -223,7 +225,7 @@ def attention_fwd(p, x, positions, cfg, mixer):
 
 
 def _model_axis_size():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1, None
     sizes = dict(mesh.shape)
@@ -259,7 +261,7 @@ def ring_attention_block(p, x, cfg, mixer, mesh, n_model):
     G = H // KV
     Pn = n_model
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(w_specs, x_spec),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(w_specs, x_spec),
              out_specs=x_spec, check_vma=False)
     def body(pp, x_loc):
         B, c, d = x_loc.shape

@@ -32,6 +32,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import PDT, _split
 from repro.models.sharding import constrain
 
@@ -160,7 +161,7 @@ def moe_fwd_dense(p, x, cfg):
 
 
 def _model_axis_size():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1, None
     sizes = dict(mesh.shape)
@@ -199,7 +200,7 @@ def moe_fwd(p, x, cfg):
         "w_out": P("model", None, None),
     }
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(w_specs, x_spec),
+    @partial(compat.shard_map, mesh=mesh, in_specs=(w_specs, x_spec),
              out_specs=(x_spec, P()), check_vma=False)
     def sharded(pp, x_loc):
         Bl, Sl, dl = x_loc.shape

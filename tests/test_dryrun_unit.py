@@ -18,13 +18,13 @@ import dataclasses
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.launch import hloanalysis
 from repro.launch.dryrun import build_cell, model_flops, roofline
 from repro.models.config import ModelConfig, ShapeConfig
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"),
+                        axis_types=compat.auto_axes(2))
 
 results = {}
 shapes = {
@@ -37,7 +37,7 @@ for arch in ("gemma2-9b", "kimi-k2-1t-a32b", "xlstm-350m", "hubert-xlarge"):
     for kind, shape in shapes.items():
         if cfg.encoder_only and kind == "decode":
             continue
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             jitted, args = build_cell(cfg, shape, mesh)
             compiled = jitted.lower(*args).compile()
         ana = hloanalysis.analyze(compiled.as_text(), 8)

@@ -20,6 +20,8 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 from repro.models.config import ModelConfig
 from repro.models import train as T
 from repro.data import SyntheticLM
@@ -33,12 +35,11 @@ pipe = SyntheticLM(256, batch=8, seq_len=32, seed=0)
 results = {}
 
 def mk_mesh(n):
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), ("data",), axis_types=compat.auto_axes(1))
 
 # ---- reference: uninterrupted 10-step run on 8 devices --------------------
 mesh8 = mk_mesh(8)
-with jax.set_mesh(mesh8):
+with compat.set_mesh(mesh8):
     state = T.init_state(jax.random.key(0), cfg, opt)
     step = jax.jit(T.make_train_step(cfg, opt))
     ref_losses = []
@@ -48,7 +49,7 @@ with jax.set_mesh(mesh8):
 
 # ---- elastic: 5 steps on 8 devices, checkpoint, resume on 4 ----------------
 ckdir = tempfile.mkdtemp()
-with jax.set_mesh(mesh8):
+with compat.set_mesh(mesh8):
     state = T.init_state(jax.random.key(0), cfg, opt)
     step = jax.jit(T.make_train_step(cfg, opt))
     for s in range(5):
@@ -60,7 +61,7 @@ state4, start = remesh_restore(ckdir, cfg, mesh4, optimizer=opt)
 results["resume_step"] = start
 _, mb = plan_elastic_batch(8, old_dp=8, new_dp=4)
 results["new_microbatches"] = mb
-with jax.set_mesh(mesh4):
+with compat.set_mesh(mesh4):
     step4 = jax.jit(T.make_train_step(cfg, opt, microbatches=mb))
     el_losses = []
     for s in range(start, 10):

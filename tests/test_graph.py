@@ -1,18 +1,12 @@
-"""Graph substrate: CSR build, partitioning, pairwise layout, generators."""
+"""Graph substrate: CSR build, partitioning, pairwise layout, generators.
+
+Deterministic tests only; the hypothesis property tests live in
+``test_properties.py`` (module-level importorskip -- hypothesis is optional).
+"""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import graph as G
-
-
-def edges_strategy(max_n=40, max_e=200):
-    return st.integers(2, max_n).flatmap(
-        lambda n: st.tuples(
-            st.just(n),
-            st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
-                     min_size=0, max_size=max_e)))
 
 
 def test_from_edges_roundtrip():
@@ -26,41 +20,52 @@ def test_from_edges_roundtrip():
     assert got == sorted(zip(src.tolist(), dst.tolist()))
 
 
-@settings(max_examples=30, deadline=None)
-@given(edges_strategy())
-def test_partition_preserves_edges(ne):
-    n, edges = ne
-    src = np.array([e[0] for e in edges], dtype=np.int32)
-    dst = np.array([e[1] for e in edges], dtype=np.int32)
-    g = G.from_edges(n, src, dst)
+def test_partition_preserves_edges_and_weights():
+    g = G.rmat(5, 120, seed=4, weighted=True)
+    want = sorted(zip(g.src.tolist(), g.dst.tolist(),
+                      g.edge_weights.tolist()))
     for chunks in (1, 2, 3):
         pg = G.partition(g, chunks)
-        # reconstruct global edges from both layouts
-        for s_arr, d_arr, m_arr in [
-            (pg.src_local, pg.dst_global, pg.edge_valid),
-            (pg.sd_src_local, pg.sd_dst_global, pg.sd_edge_valid),
+        # reconstruct global (src, dst, weight) triples from both layouts
+        for s_arr, d_arr, m_arr, w_arr in [
+            (pg.src_local, pg.dst_global, pg.edge_valid, pg.edge_weight),
+            (pg.sd_src_local, pg.sd_dst_global, pg.sd_edge_valid,
+             pg.sd_edge_weight),
         ]:
             rec = []
             for c in range(chunks):
                 sel = m_arr[c] == 1
                 gs = s_arr[c][sel] + c * pg.chunk_size
-                rec.extend(zip(gs.tolist(), d_arr[c][sel].tolist()))
-            assert sorted(rec) == sorted(zip(g.src.tolist(), g.dst.tolist()))
+                rec.extend(zip(gs.tolist(), d_arr[c][sel].tolist(),
+                               w_arr[c][sel].tolist()))
+            assert sorted(rec) == want
 
 
-@settings(max_examples=30, deadline=None)
-@given(edges_strategy())
-def test_sortdest_layout_is_dest_sorted(ne):
-    n, edges = ne
-    if not edges:
-        return
-    g = G.from_edges(n, np.array([e[0] for e in edges], np.int32),
-                     np.array([e[1] for e in edges], np.int32))
+def test_sortdest_layout_is_dest_sorted():
+    g = G.rmat(5, 150, seed=6)
     pg = G.partition(g, 2)
     for c in range(pg.num_chunks):
         sel = pg.sd_edge_valid[c] == 1
         d = pg.sd_dst_global[c][sel]
         assert np.all(np.diff(d) >= 0), "edges must be sorted by destination"
+
+
+def test_out_weight_sums_outgoing():
+    g = G.from_edges(4, np.array([0, 0, 1]), np.array([1, 2, 2]),
+                     weight=np.array([2.0, 3.0, 4.0]))
+    pg = G.partition(g, 2)
+    ow = pg.out_weight.reshape(-1)[: g.num_vertices]
+    # vertex 0: 2+3, vertex 1: 4, sinks fall back to 1 (div-0 clip)
+    assert ow.tolist() == [5.0, 4.0, 1.0, 1.0]
+
+
+def test_to_undirected_keeps_min_weight():
+    g = G.from_edges(3, np.array([0, 1]), np.array([1, 0]),
+                     weight=np.array([5.0, 2.0]))
+    u = g.to_undirected()
+    pairs = dict(zip(zip(u.src.tolist(), u.dst.tolist()),
+                     u.edge_weights.tolist()))
+    assert pairs == {(0, 1): 2.0, (1, 0): 2.0}
 
 
 def test_to_undirected_symmetric():

@@ -17,6 +17,8 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 results = {}
 
 # ---- 1) graph engine: every strategy x PE count vs serial oracles --------
@@ -48,9 +50,9 @@ cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=64,
 p = MOE.init_moe(jax.random.key(0), cfg)
 x = jax.random.normal(jax.random.key(1), (4, 16, 64), jnp.bfloat16)
 ref_moe, _ = MOE.moe_fwd_dense(p, x, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = compat.make_mesh((2, 4), ("data", "model"),
+                        axis_types=compat.auto_axes(2))
+with compat.set_mesh(mesh):
     got_moe, _ = jax.jit(
         lambda p, x: MOE.moe_fwd(p, x, cfg),
         in_shardings=(jax.tree.map(lambda _: NamedSharding(mesh, P()), p),
@@ -70,9 +72,9 @@ batch = pipe.batch_at(0)
 s_single = T.init_state(jax.random.key(0), tcfg, opt)
 s_single, m_single = jax.jit(T.make_train_step(tcfg, opt))(s_single, batch)
 
-mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh2):
+mesh2 = compat.make_mesh((4, 2), ("data", "model"),
+                         axis_types=compat.auto_axes(2))
+with compat.set_mesh(mesh2):
     state = T.init_state(jax.random.key(0), tcfg, opt)
     specs = T.train_state_specs(jax.eval_shape(lambda: state), mesh2, zero=True)
     sh = jax.tree.map(lambda s: NamedSharding(mesh2, s), specs,
@@ -102,9 +104,9 @@ rp = jax.tree.map(lambda a: a.astype(jnp.float32),
                   LY.init_attention(jax.random.key(7), rcfg))
 rx = jax.random.normal(jax.random.key(8), (4, 64, 48), jnp.float32)
 rref, _ = LY.attention_fwd(rp, rx, jnp.arange(64, dtype=jnp.int32), rcfg, "attn")
-rmesh = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(rmesh):
+rmesh = compat.make_mesh((2, 4), ("data", "model"),
+                         axis_types=compat.auto_axes(2))
+with compat.set_mesh(rmesh):
     rgot = jax.jit(
         lambda p, x: LY.ring_attention_block(p, x, rcfg, "attn", rmesh, 4),
         in_shardings=(jax.tree.map(lambda _: NamedSharding(rmesh, P()), rp),
@@ -114,15 +116,15 @@ results["ring_attn_err"] = float(jnp.max(jnp.abs(rgot - rref)))
 # ---- 4) compressed_psum == psum -------------------------------------------
 from repro.optim import compressed_psum
 import functools
-mesh3 = jax.make_mesh((8,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh3 = compat.make_mesh((8,), ("dp",), axis_types=compat.auto_axes(1))
 xs = jax.random.normal(jax.random.key(5), (8, 1024), jnp.float32)
 
-@functools.partial(jax.shard_map, mesh=mesh3, in_specs=P("dp"),
+@functools.partial(compat.shard_map, mesh=mesh3, in_specs=P("dp"),
                    out_specs=P("dp"), check_vma=False)
 def comp(v):
     return compressed_psum(v, "dp")[None]
 
-@functools.partial(jax.shard_map, mesh=mesh3, in_specs=P("dp"),
+@functools.partial(compat.shard_map, mesh=mesh3, in_specs=P("dp"),
                    out_specs=P("dp"), check_vma=False)
 def exact(v):
     return jax.lax.psum(v, "dp")[None]

@@ -3,10 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import optim as O
+from repro import compat
 
 
 def numpy_adamw(params, grads, steps, lr=1e-2, b1=0.9, b2=0.95, eps=1e-8,
@@ -75,14 +74,12 @@ def test_schedules():
     assert 0.09 < float(cos(jnp.asarray(100))) < 0.11
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 2000), st.integers(0, 2 ** 31 - 1))
-def test_quantize_roundtrip_error_bound(n, seed):
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=n) * 10, jnp.float32)
+def test_quantize_roundtrip_error_bound_deterministic():
+    # the randomized version lives in test_properties.py (hypothesis)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=777) * 10, jnp.float32)
     q, s = O.quantize_int8(x)
     back = O.dequantize_int8(q, s, x.shape)
-    # error per block: rounding (scale/2 = maxabs/254) + f16 scale storage
     err = np.abs(np.asarray(back) - np.asarray(x))
     maxabs = np.abs(np.asarray(x)).max()
     bound = maxabs * (1 / 254 + 1e-3) + 1e-6
@@ -94,15 +91,14 @@ def test_error_feedback_reduces_bias():
     grow linearly)."""
     ef_init, ef_apply = O.make_error_feedback()
     # single-device: compressed_psum over a trivial axis via shard_map
-    mesh = jax.make_mesh((1,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("dp",), axis_types=compat.auto_axes(1))
     g = {"w": jnp.full((256,), 0.001, jnp.float32)}  # tiny grads: worst case
     res = ef_init(g)
     total_sent = jnp.zeros((256,))
     import functools
     from jax.sharding import PartitionSpec as P
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P(), P()),
                        out_specs=(P(), P()), check_vma=False)
     def step(gw, rw):
         synced, new_res = ef_apply({"w": gw}, {"w": rw}, "dp")

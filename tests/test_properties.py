@@ -1,0 +1,122 @@
+"""Hypothesis property tests, collected from across the suite.
+
+``hypothesis`` is an optional dev dependency: this module skips cleanly when
+it is absent (the deterministic tests in the per-module files always run).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import graph as G  # noqa: E402
+from repro.core import (components_oracle, from_edges,  # noqa: E402
+                        labelprop_serial)
+from repro.kernels import ops, ref  # noqa: E402
+from repro import optim as O  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def edges_strategy(max_n=40, max_e=200):
+    return st.integers(2, max_n).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                     min_size=0, max_size=max_e)))
+
+
+# -- graph substrate ---------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_strategy())
+def test_partition_preserves_edges(ne):
+    n, edges = ne
+    src = np.array([e[0] for e in edges], dtype=np.int32)
+    dst = np.array([e[1] for e in edges], dtype=np.int32)
+    w = (np.arange(len(edges)) + 1).astype(np.float32)
+    g = G.from_edges(n, src, dst, weight=w)
+    for chunks in (1, 2, 3):
+        pg = G.partition(g, chunks)
+        # reconstruct global (src, dst, weight) triples from both layouts
+        for s_arr, d_arr, m_arr, w_arr in [
+            (pg.src_local, pg.dst_global, pg.edge_valid, pg.edge_weight),
+            (pg.sd_src_local, pg.sd_dst_global, pg.sd_edge_valid,
+             pg.sd_edge_weight),
+        ]:
+            rec = []
+            for c in range(chunks):
+                sel = m_arr[c] == 1
+                gs = s_arr[c][sel] + c * pg.chunk_size
+                rec.extend(zip(gs.tolist(), d_arr[c][sel].tolist(),
+                               w_arr[c][sel].tolist()))
+            want = sorted(zip(g.src.tolist(), g.dst.tolist(),
+                              g.edge_weights.tolist()))
+            assert sorted(rec) == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_strategy())
+def test_sortdest_layout_is_dest_sorted(ne):
+    n, edges = ne
+    if not edges:
+        return
+    g = G.from_edges(n, np.array([e[0] for e in edges], np.int32),
+                     np.array([e[1] for e in edges], np.int32))
+    pg = G.partition(g, 2)
+    for c in range(pg.num_chunks):
+        sel = pg.sd_edge_valid[c] == 1
+        d = pg.sd_dst_global[c][sel]
+        assert np.all(np.diff(d) >= 0), "edges must be sorted by destination"
+
+
+# -- label propagation -------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30).flatmap(
+    lambda n: st.tuples(st.just(n), st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=0, max_size=80))))
+def test_serial_matches_union_find(ne):
+    n, edges = ne
+    src = np.array([e[0] for e in edges] or [0], np.int32)
+    dst = np.array([e[1] for e in edges] or [0], np.int32)
+    g = from_edges(n, src, dst).to_undirected()
+    labels, iters = labelprop_serial(g)
+    assert np.array_equal(labels, components_oracle(g))
+
+
+# -- kernels -----------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+def test_push_add_property(E, V, seed):
+    r = np.random.default_rng(seed)
+    src = jnp.asarray(r.integers(0, V, E), jnp.int32)
+    dst = jnp.asarray(r.integers(0, V, E), jnp.int32)
+    valid = jnp.asarray(r.integers(0, 2, E), jnp.int32)
+    vals = jnp.asarray(r.normal(size=V), jnp.float32)
+    got = np.asarray(ops.push(vals, src, dst, valid, V, combine="add"))
+    want = np.asarray(ref.push_ref(vals, src, dst, valid, V, combine="add"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# -- optimizer compression ---------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 2000), st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n) * 10, jnp.float32)
+    q, s = O.quantize_int8(x)
+    back = O.dequantize_int8(q, s, x.shape)
+    # error per block: rounding (scale/2 = maxabs/254) + f16 scale storage
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    maxabs = np.abs(np.asarray(x)).max()
+    bound = maxabs * (1 / 254 + 1e-3) + 1e-6
+    assert err.max() <= bound
