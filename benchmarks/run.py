@@ -9,6 +9,7 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   table5.*   BFS runtimes           (reachability depth)
   table6.*   weighted-PageRank runtimes
   fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
+  imbalance.* per-chare load skew + padding waste per partitioner policy
   wire.*     analytic per-device wire bytes on the production mesh
   kernel.*   push-kernel reference timing + TPU cost model
   roofline.* dry-run roofline aggregates (reads experiments/dryrun/)
@@ -41,10 +42,16 @@ def main():
     from benchmarks import kernelbench, roofline, tables
     from repro.core import get_spec, registered_names
 
+    # quick mode keeps the engine sweep on the default placement; the full
+    # run also measures the edge-balanced policy per strategy
+    partitioners = (("contiguous",) if args.quick
+                    else ("contiguous", "edge_balanced"))
+
     # ---- Tables 2-6 + Figures 1/2 (one per registered program) ------------
     for algo in registered_names():
         table = get_spec(algo).table
-        rows = tables.run_table(algo, scale_log2=scale, repeats=repeats)
+        rows = tables.run_table(algo, scale_log2=scale, repeats=repeats,
+                                partitioners=partitioners)
         serial = {g: t for g, impl, p, t, ok in rows if impl == "serial"}
         best_actor = {}
         for g, impl, pes, t, ok in rows:
@@ -60,6 +67,14 @@ def main():
             if impl == "dataflow":
                 emit(f"fig12.{algo}.{g}.dataflow_vs_serial",
                      f"{t / serial[g]:.2f}", "x-serial-runtime")
+
+    # ---- partitioner imbalance (paper's load-skew observation) ------------
+    for g, pname, pes, st in tables.imbalance_table(scale_log2=scale,
+                                                    pe_counts=(8,)):
+        emit(f"imbalance.{g}.{pname}@{pes}", f"{st['edge_imbalance']:.3f}",
+             f"max_e={st['max_edges']} mean_e={st['mean_edges']:.0f} "
+             f"edge_pad={st['edge_padding_waste']:.2f} "
+             f"vert_pad={st['vertex_padding_waste']:.2f}")
 
     # ---- wire model --------------------------------------------------------
     for g, variant, pes, bytes_ in tables.wire_table(scale_log2=scale):

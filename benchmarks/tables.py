@@ -19,7 +19,9 @@ from __future__ import annotations
 from benchmarks.graphx_analogue import (bench, labelprop_dataflow,
                                         pagerank_dataflow)
 from repro.configs.graphs import GRAPHS, VARIANTS
-from repro.core import Engine, get_spec, load_dataset, partition, wire_model
+from repro.core import (Engine, get_spec, load_dataset, partition,
+                        partition_stats, partitioner_names, policy_label,
+                        wire_model)
 
 # Dataflow ("GraphX") stand-ins exist only for the paper's own two
 # algorithms; programs without one simply emit no dataflow row.
@@ -30,8 +32,13 @@ DATAFLOW = {
 
 
 def run_table(algorithm: str, scale_log2: int = 13, repeats: int = 3,
-              pe_counts=(1,)):
-    """-> list of (graph, impl, pes, seconds, correct)."""
+              pe_counts=(1,), partitioners=("contiguous",)):
+    """-> list of (graph, impl, pes, seconds, correct).
+
+    ``impl`` is the strategy name, suffixed ``+<partitioner>`` for non-default
+    placement policies.  Each (partitioner, PE count) cell partitions once,
+    shared across all strategies.
+    """
     import jax
 
     spec = get_spec(algorithm)
@@ -51,24 +58,51 @@ def run_table(algorithm: str, scale_log2: int = 13, repeats: int = 3,
             t_flow = bench(lambda: flow(g, params), repeats)
             rows.append((paper_name, "dataflow", 1, t_flow, True))
 
-        for variant in VARIANTS:
+        for pname in partitioners:
             for pes in pe_counts:
-                pg = partition(g, pes)
-                eng = Engine(pg, strategy=variant)
-                run = lambda: eng.run(algorithm, **params)
-                out, _ = run()
-                ok = spec.matches(out, ref)
-                rows.append((paper_name, variant, pes, bench(run, repeats), ok))
+                pg = partition(g, pes, partitioner=pname)
+                for variant in VARIANTS:
+                    eng = Engine(pg, strategy=variant)
+                    run = lambda: eng.run(algorithm, **params)
+                    out, _ = run()
+                    ok = spec.matches(out, ref)
+                    rows.append((paper_name, policy_label(variant, pname),
+                                 pes, bench(run, repeats), ok))
     return rows
 
 
-def wire_table(scale_log2: int = 13, pe_counts=(16, 64, 128, 256)):
+def wire_table(scale_log2: int = 13, pe_counts=(16, 64, 128, 256),
+               partitioners=("contiguous", "edge_balanced")):
     """Analytic per-iteration wire bytes/device per variant (DESIGN.md #2):
-    the quantity behind the paper's scaling curves, on the target mesh."""
+    the quantity behind the paper's scaling curves, on the target mesh.
+    Variant labels carry a ``+<partitioner>`` suffix for non-default policies
+    (placement changes padded sizes and max-chare edge payloads)."""
     rows = []
     for paper_name, (dskey, *_rest) in GRAPHS.items():
         g = load_dataset(dskey, scale_log2=scale_log2)
         for pes in pe_counts:
-            for variant, bytes_ in wire_model(g, pes).items():
-                rows.append((paper_name, variant, pes, bytes_))
+            for pname in partitioners:
+                for variant, bytes_ in wire_model(
+                        g, pes, partitioner=pname).items():
+                    rows.append((paper_name, policy_label(variant, pname),
+                                 pes, bytes_))
+    return rows
+
+
+def imbalance_table(scale_log2: int = 13, pe_counts=(8,), partitioners=None):
+    """Per-chare load skew per placement policy -- the paper's imbalance
+    observation as a measurable table.
+
+    -> list of (graph, partitioner, pes, stats-dict); stats come from
+    ``repro.core.partition_stats`` (max/mean edges, imbalance ratios,
+    padding waste).  Pure host-side prep: no devices needed, so the full
+    partitioner registry is cheap to sweep at any PE count.
+    """
+    rows = []
+    for paper_name, (dskey, *_rest) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=scale_log2)
+        for pes in pe_counts:
+            for pname in partitioners or partitioner_names():
+                pg = partition(g, pes, partitioner=pname)
+                rows.append((paper_name, pname, pes, partition_stats(pg)))
     return rows

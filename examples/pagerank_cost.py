@@ -16,12 +16,20 @@ from repro.core import get_spec, load_dataset, registered_names, run_cost
 
 
 def main():
+    from repro.core import partitioner_names, policy_label
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--pes", type=int, nargs="+", default=[1])
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--algorithm", nargs="+",
                     choices=registered_names() + ["all"], default=["all"])
+    ap.add_argument("--partitioners", nargs="+",
+                    choices=partitioner_names() + ["all"],
+                    default=["contiguous"],
+                    help="placement policies to sweep (see DESIGN.md sec. 7)")
     args = ap.parse_args()
+    parts = (partitioner_names() if "all" in args.partitioners
+             else args.partitioners)
 
     algos = registered_names() if "all" in args.algorithm else args.algorithm
     for paper_name, (dskey, V, E, pr_s, lp_s) in GRAPHS.items():
@@ -32,15 +40,17 @@ def main():
             g = spec.prepare_graph(
                 load_dataset(dskey, scale_log2=args.scale,
                              weighted=spec.weighted))
-            rep = run_cost(g, algorithm=algo, pe_counts=args.pes)
+            rep = run_cost(g, algorithm=algo, pe_counts=args.pes,
+                           partitioners=parts)
             print(f"  {algo}: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
                   f"serial={rep.serial_s:.3f}s")
-            for strategy, pes, t in rep.rows():
+            for strategy, pname, pes, t in rep.rows():
                 if strategy == "serial":
                     continue
+                label = policy_label(strategy, pname)
                 mark = " <= serial" if t <= rep.serial_s else ""
-                print(f"    {strategy:10s} @{pes} PE: {t:.3f}s{mark}")
-            print(f"    COST: { {k: v for k, v in rep.cost.items()} }")
+                print(f"    {label:24s} @{pes} PE: {t:.3f}s{mark}")
+            print(f"    COST: { {'/'.join(k): v for k, v in rep.cost.items()} }")
 
 
 if __name__ == "__main__":

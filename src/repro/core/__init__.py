@@ -2,6 +2,7 @@
 
 Public API:
     Graph / partition / generators          repro.core.graph
+    Partitioner registry / PartitionPlan    repro.core.partitioners
     Engine (strategy x vertex program)      repro.core.engine
     VertexProgram / registry / run_parallel repro.core.programs
     pagerank_serial / pagerank_parallel     repro.core.pagerank
@@ -13,6 +14,10 @@ Public API:
 from repro.core.graph import (Graph, PartitionedGraph, from_edges, partition,
                               rmat, erdos_renyi, ring, two_cliques,
                               random_weights, load_dataset, dataset_names)
+from repro.core.partitioners import (PartitionPlan, PartitionerSpec,
+                                     get_partitioner, make_plan,
+                                     partition_stats, partitioner_names,
+                                     policy_label, register_partitioner)
 from repro.core.engine import Engine, make_pe_mesh
 from repro.core.programs import (VertexProgram, ProgramSpec, make_program,
                                  get_spec, registered_names, run_parallel,

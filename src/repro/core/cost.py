@@ -37,25 +37,28 @@ def _time(fn: Callable, repeats: int = 3) -> float:
 class CostReport:
     algorithm: str
     serial_s: float
-    # {(strategy, pes): seconds}
+    # {(partitioner, strategy, pes): seconds}
     parallel_s: dict
-    cost: dict  # {strategy: int | inf}
+    cost: dict  # {(partitioner, strategy): int | inf}
 
     def rows(self):
-        yield ("serial", 1, self.serial_s)
-        for (strategy, pes), t in sorted(self.parallel_s.items()):
-            yield (strategy, pes, t)
+        """-> (strategy, partitioner, pes, seconds) rows, serial first."""
+        yield ("serial", "-", 1, self.serial_s)
+        for (part, strategy, pes), t in sorted(self.parallel_s.items()):
+            yield (strategy, part, pes, t)
 
 
 def run_cost(graph: Graph, algorithm: str = "pagerank",
              strategies=("reduction", "sortdest", "basic", "pairs"),
              pe_counts=(1, 2, 4, 8), repeats: int = 3,
-             **algo_params) -> CostReport:
-    """COST sweep for any registered vertex program.
+             partitioners=("contiguous",), **algo_params) -> CostReport:
+    """COST sweep for any registered vertex program, per partitioner policy.
 
     ``graph`` should already be in the shape the program expects (the caller
     symmetrizes / attaches weights; ``ProgramSpec.prepare_graph`` helps).
     Extra keyword args are forwarded to the program (e.g. ``source=0``).
+    Each (partitioner, PE count) cell is partitioned ONCE and shared across
+    every strategy -- prep cost does not multiply with the strategy count.
     """
     import jax
 
@@ -67,19 +70,22 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
     serial = _time(lambda: spec.serial(graph, **params), repeats)
 
     parallel = {}
-    for strategy in strategies:
+    for partitioner in partitioners:
         for pes in pe_counts:
-            pg = partition(graph, pes)
-            eng = Engine(pg, strategy=strategy)
-            run = lambda: eng.run(algorithm, **params)
-            run()  # compile outside the timed region (paper times compute only)
-            parallel[(strategy, pes)] = _time(run, repeats)
+            pg = partition(graph, pes, partitioner=partitioner)
+            for strategy in strategies:
+                eng = Engine(pg, strategy=strategy)
+                run = lambda: eng.run(algorithm, **params)
+                run()  # compile outside the timed region (paper times compute)
+                parallel[(partitioner, strategy, pes)] = _time(run, repeats)
 
     cost = {}
-    for strategy in strategies:
-        beats = [p for p in pe_counts
-                 if parallel.get((strategy, p), np.inf) <= serial]
-        cost[strategy] = min(beats) if beats else float("inf")
+    for partitioner in partitioners:
+        for strategy in strategies:
+            beats = [p for p in pe_counts
+                     if parallel.get((partitioner, strategy, p), np.inf)
+                     <= serial]
+            cost[(partitioner, strategy)] = min(beats) if beats else float("inf")
     return CostReport(algorithm, serial, parallel, cost)
 
 
@@ -87,18 +93,28 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
 # Analytic wire model (per iteration, per device) for the target TPU mesh.
 # ---------------------------------------------------------------------------
 
-def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4) -> dict:
+def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4,
+               partitioner: str = "contiguous") -> dict:
     """Bytes on the ICI wire per device per iteration, by variant.
 
-    reduction: ring all-reduce of a dense |V| buffer       ~2*V*b
-    sortdest:  reduce-scatter of locally-combined buffer   ~V*b
-    basic:     all_to_all of (dst,val) pairs, no combining ~2*(E/P)*2*b
-    pairs:     (P-1) ring hops of one chunk block          ~V*b
+    reduction: ring all-reduce of a dense |V'| buffer      ~2*V'*b
+    sortdest:  reduce-scatter of locally-combined buffer   ~V'*b
+    basic:     all_to_all of (dst,val) pairs, no combining ~2*Emax*2*b
+    pairs:     (P-1) ring hops of one chunk block          ~V'*b
+
+    V' is the *padded* vertex count P*K and Emax the heaviest chare's edge
+    count -- both depend on the partitioner, so placement skew (the paper's
+    load-imbalance observation) shows up directly in the wire bytes.
     """
-    V, E, Pn = graph.num_vertices, graph.num_edges, num_pes
+    from repro.core.partitioners import make_plan
+
+    plan = make_plan(graph, num_pes, partitioner)
+    Pn = num_pes
+    Vp = Pn * plan.chunk_size  # padded vertices (== V for perfect balance)
+    e_max = int(plan.edges_per_chunk(graph).max()) if graph.num_edges else 0
     return {
-        "reduction": 2 * V * value_bytes * (Pn - 1) / max(Pn, 1),
-        "sortdest": V * value_bytes * (Pn - 1) / max(Pn, 1),
-        "pairs": V * value_bytes * (Pn - 1) / max(Pn, 1),
-        "basic": 2 * (E / max(Pn, 1)) * 2 * value_bytes,
+        "reduction": 2 * Vp * value_bytes * (Pn - 1) / max(Pn, 1),
+        "sortdest": Vp * value_bytes * (Pn - 1) / max(Pn, 1),
+        "pairs": Vp * value_bytes * (Pn - 1) / max(Pn, 1),
+        "basic": 2 * e_max * 2 * value_bytes,
     }

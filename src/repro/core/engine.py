@@ -171,7 +171,9 @@ class Engine:
             fn = jax.jit(self._smap(self._make_body(program)))
             self._compiled[program.key] = fn
         state, iters = fn(self.arrays, self.aux, s0)
-        state = jax.device_get(state).reshape(-1)[: self.pg.graph.num_vertices]
+        # un-permute: padded-id state -> original vertex order (the relabel
+        # invariant -- callers always see original ids; DESIGN.md sec. 7)
+        state = jax.device_get(state).reshape(-1)[self.pg.global_to_local]
         return state, int(jax.device_get(iters)[0, 0])
 
     # -- thin per-algorithm wrappers ----------------------------------------

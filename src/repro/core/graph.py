@@ -5,6 +5,15 @@ stores its local vertices in index order plus the destinations of their
 outgoing edges (CSR).  ``Graph`` is the global CSR; ``PartitionedGraph`` is the
 chare decomposition with SPMD-friendly (padded, rectangular) per-chunk arrays.
 
+Which vertices land on which chare is delegated to the pluggable partitioner
+layer (``repro.core.partitioners``): ``partition(graph, C, partitioner=...)``
+obtains a ``PartitionPlan`` (vertex permutation + chunk bounds), relabels every
+edge into the permuted "padded id" space, and records the global<->local
+relabel arrays the engine uses to keep original vertex ids at the API boundary
+(see DESIGN.md "Partitioning").  All layout builds are vectorized
+(argsort/bincount bucketing) -- no per-chunk Python loops -- so graph prep
+scales to the larger RMAT sizes.
+
 Real datasets from the paper (soc-LiveJournal1, twitter_rv, uk-2007-05) are not
 available offline; the registry provides *scaled synthetic stand-ins* with the
 same edge/vertex ratios (14.2x, 23.8x, 35.3x) generated with an RMAT-style
@@ -17,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.core import partitioners as part_mod
 
 INT = np.int32
 WEIGHT = np.float32
@@ -119,15 +130,22 @@ def random_weights(graph: Graph, seed: int = 0, low: float = 1.0,
 
 @dataclasses.dataclass(frozen=True)
 class PartitionedGraph:
-    """Chare decomposition: ``num_chunks`` contiguous vertex chunks.
+    """Chare decomposition: ``num_chunks`` vertex chunks placed by a
+    partitioner policy (contiguous id chunks by default).
 
-    All per-chunk arrays are padded to a common rectangle so they can be
-    sharded on the leading axis with ``shard_map`` (one row <-> one chare).
+    All per-chunk arrays live in *padded id* space -- the permutation chosen
+    by the partitioner, laid out as ``chunk * chunk_size + slot`` -- and are
+    padded to a common rectangle so they can be sharded on the leading axis
+    with ``shard_map`` (one row <-> one chare).  ``global_to_local`` /
+    ``local_to_global`` translate between original vertex ids (what callers
+    and programs' serial references see) and padded ids (what the chare
+    arrays index); for the default ``contiguous`` policy the relabel is the
+    identity.
 
     Basic layout (edges in local-source order, as in the paper's basic
     variant):
       * ``src_local``  [C, Emax] local source index of each edge
-      * ``dst_global`` [C, Emax] global destination vertex of each edge
+      * ``dst_global`` [C, Emax] *padded id* of each edge's destination
       * ``edge_valid`` [C, Emax] 0/1 padding mask
 
     Sort-destination layout (the paper's best variant -- the same edges
@@ -159,59 +177,112 @@ class PartitionedGraph:
     sd_dst_global: np.ndarray
     sd_edge_valid: np.ndarray
     sd_edge_weight: np.ndarray
+    partitioner: str = "contiguous"
+    global_to_local: np.ndarray | None = None  # [V] original id -> padded id
+    local_to_global: np.ndarray | None = None  # [C*K] padded id -> original/-1
 
     @property
     def padded_vertices(self) -> int:
         return self.num_chunks * self.chunk_size
 
     def chunk_of(self, v: np.ndarray) -> np.ndarray:
+        """Owning chunk of a *padded* id (use ``global_to_local`` first for
+        original ids)."""
         return v // self.chunk_size
 
 
-def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
-    """Split ``graph`` into ``num_chunks`` contiguous vertex chunks (chares)."""
-    n = graph.num_vertices
-    chunk_size = -(-n // num_chunks)  # ceil
-    padded = num_chunks * chunk_size
+def _stable_argsort_bounded(keys: np.ndarray, bound: int) -> np.ndarray:
+    """Stable argsort of non-negative int keys known to be < ``bound``.
 
-    src, dst = graph.src, graph.dst
+    For bounds under 2^30 this runs one or two int16 radix passes (numpy's
+    stable sort is radix for 16-bit ints but mergesort for 32/64-bit, which
+    is ~4x slower on edge-scale arrays); larger bounds fall back to the
+    generic stable sort.
+    """
+    if bound <= 1 << 15:
+        return np.argsort(keys.astype(np.int16), kind="stable")
+    if bound <= 1 << 30:
+        lo = (keys & 0x7FFF).astype(np.int16)
+        hi = (keys >> 15).astype(np.int16)
+        o1 = np.argsort(lo, kind="stable")
+        return o1[np.argsort(hi[o1], kind="stable")]
+    return np.argsort(keys, kind="stable")
+
+
+def _pack_edges(order_idx, src, dst, wgt, owner, per_chunk_e, num_chunks,
+                chunk_size, emax):
+    """Scatter owner-grouped edges into the padded [C, Emax] rectangle.
+
+    ``order_idx`` must list edges with owners grouped (nondecreasing); the
+    slot of an edge within its row is its rank among same-owner edges, so one
+    global sort replaces the seed's per-chunk ``flatnonzero`` loop.  The
+    validity mask is not built here -- it depends only on ``per_chunk_e``
+    (identical for every edge order), so ``partition`` builds it once.
+    """
+    so, do = src[order_idx], dst[order_idx]
+    ow = owner[order_idx]
+    starts = np.zeros(num_chunks, dtype=np.int64)
+    np.cumsum(per_chunk_e[:-1], out=starts[1:])
+    # ow is sorted, so flat = row offset + within-row slot is ascending:
+    # flat[i] = ow[i]*emax + (i - starts[ow[i]])
+    flat = (np.arange(len(order_idx), dtype=np.int64)
+            + (np.arange(num_chunks, dtype=np.int64) * emax - starts)[ow])
+    s = np.zeros((num_chunks, emax), dtype=INT)
+    d = np.zeros((num_chunks, emax), dtype=INT)
+    w = np.ones((num_chunks, emax), dtype=WEIGHT)
+    s.ravel()[flat] = so - ow * chunk_size
+    d.ravel()[flat] = do
+    w.ravel()[flat] = wgt[order_idx]
+    return s, d, w
+
+
+def partition(graph: Graph, num_chunks: int,
+              partitioner: str = "contiguous") -> PartitionedGraph:
+    """Split ``graph`` into ``num_chunks`` chares under a partitioner policy.
+
+    ``partitioner`` names a registered policy (``repro.core.partitioners``);
+    the default reproduces the paper's contiguous equal-vertex chunks.
+    """
+    n = graph.num_vertices
+    plan = part_mod.make_plan(graph, num_chunks, partitioner)
+    chunk_size = plan.chunk_size
+    padded = num_chunks * chunk_size
+    g2l, l2g = plan.relabel()
+
+    # relabel every edge endpoint into padded-id space; int32 halves the
+    # memory traffic of the gathers/scatters below
+    g2l32 = g2l.astype(INT)
+    src = g2l32[graph.src]
+    dst = g2l32[graph.dst]
     wgt = graph.edge_weights
     owner = src // chunk_size
 
+    live = l2g >= 0
     deg = np.ones(padded, dtype=INT)  # 1 for padding (avoids div-by-zero)
-    deg[:n] = np.maximum(graph.out_degrees, 1)
-    vertex_valid = np.zeros(padded, dtype=INT)
-    vertex_valid[:n] = 1
-    wsum = np.bincount(src, weights=wgt, minlength=n).astype(WEIGHT)
+    deg[live] = np.maximum(graph.out_degrees[l2g[live]], 1)
+    vertex_valid = live.astype(INT)
+    wsum = np.bincount(graph.src, weights=wgt, minlength=n).astype(WEIGHT)
     out_weight = np.ones(padded, dtype=WEIGHT)
-    out_weight[:n] = np.where(wsum > 0, wsum, 1.0)
+    out_weight[live] = np.where(wsum[l2g[live]] > 0, wsum[l2g[live]], 1.0)
 
     per_chunk_e = np.bincount(owner, minlength=num_chunks)
-    emax = int(per_chunk_e.max()) if len(src) else 1
-    emax = max(emax, 1)
+    emax = max(int(per_chunk_e.max()) if len(src) else 1, 1)
 
-    def _layout(order_key):
-        """Pack edges into [C, Emax] rows following a per-chunk sort key."""
-        s = np.full((num_chunks, emax), 0, dtype=INT)
-        d = np.full((num_chunks, emax), 0, dtype=INT)
-        m = np.zeros((num_chunks, emax), dtype=INT)
-        w = np.ones((num_chunks, emax), dtype=WEIGHT)
-        for c in range(num_chunks):
-            sel = np.flatnonzero(owner == c)
-            if order_key is not None and len(sel):
-                sel = sel[np.lexsort(order_key(sel))]
-            k = len(sel)
-            s[c, :k] = src[sel] - c * chunk_size
-            d[c, :k] = dst[sel]
-            m[c, :k] = 1
-            w[c, :k] = wgt[sel]
-        return s, d, m, w
-
-    # basic: keep CSR (local-source) order within the chunk
-    b_s, b_d, b_m, b_w = _layout(None)
-    # sort-destination: order by (dest chunk, dest vertex)
-    sd_key = lambda sel: (dst[sel], dst[sel] // chunk_size)
-    sd_s, sd_d, sd_m, sd_w = _layout(sd_key)
+    # basic: local-source order within the chunk (the permuted CSR order)
+    b_order = _stable_argsort_bounded(src, padded)
+    # sort-destination: (owner, dest) -- dest chunk and dest vertex at once,
+    # since padded ids already sort by (chunk, slot)
+    sd_bound = num_chunks * padded
+    key_dtype = INT if sd_bound <= 1 << 31 else np.int64
+    sd_order = _stable_argsort_bounded(
+        owner.astype(key_dtype) * padded + dst, sd_bound)
+    pack = lambda order_idx: _pack_edges(order_idx, src, dst, wgt, owner,
+                                         per_chunk_e, num_chunks, chunk_size,
+                                         emax)
+    b_s, b_d, b_w = pack(b_order)
+    sd_s, sd_d, sd_w = pack(sd_order)
+    # one validity mask serves both layouts: row c has per_chunk_e[c] edges
+    edge_valid = (np.arange(emax) < per_chunk_e[:, None]).astype(INT)
 
     return PartitionedGraph(
         graph=graph,
@@ -222,12 +293,15 @@ def partition(graph: Graph, num_chunks: int) -> PartitionedGraph:
         out_weight=out_weight.reshape(num_chunks, chunk_size),
         src_local=b_s,
         dst_global=b_d,
-        edge_valid=b_m,
+        edge_valid=edge_valid,
         edge_weight=b_w,
         sd_src_local=sd_s,
         sd_dst_global=sd_d,
-        sd_edge_valid=sd_m,
+        sd_edge_valid=edge_valid,
         sd_edge_weight=sd_w,
+        partitioner=partitioner,
+        global_to_local=g2l,
+        local_to_global=l2g,
     )
 
 
@@ -248,26 +322,29 @@ class PairwiseLayout:
 
 
 def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
-    src, dst = pg.graph.src, pg.graph.dst
+    """Bucket edges by (source chunk, dest chunk), vectorized: one stable
+    argsort over flattened bucket ids replaces the seed's O(C^2) scan loop."""
+    g2l32 = pg.global_to_local.astype(INT)
+    src = g2l32[pg.graph.src]
+    dst = g2l32[pg.graph.dst]
     wgt = pg.graph.edge_weights
     K, C = pg.chunk_size, pg.num_chunks
-    sc = src // K
-    dc = dst // K
-    counts = np.zeros((C, C), dtype=np.int64)
-    np.add.at(counts, (sc, dc), 1)
-    pmax = max(int(counts.max()), 1)
+    bucket = (src // K) * C + dst // K  # flattened (sc, dc)
+    counts = np.bincount(bucket, minlength=C * C)
+    pmax = max(int(counts.max()) if len(src) else 1, 1)
+    order = _stable_argsort_bounded(bucket, C * C)
+    bo = bucket[order]
+    starts = np.zeros(C * C, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    flat = (np.arange(len(order), dtype=np.int64)
+            + (np.arange(C * C, dtype=np.int64) * pmax - starts)[bo])
     s = np.zeros((C, C, pmax), dtype=INT)
     d = np.zeros((C, C, pmax), dtype=INT)
-    m = np.zeros((C, C, pmax), dtype=INT)
     w = np.ones((C, C, pmax), dtype=WEIGHT)
-    for c in range(C):
-        for k in range(C):
-            sel = np.flatnonzero((sc == c) & (dc == k))
-            n = len(sel)
-            s[c, k, :n] = src[sel] - c * K
-            d[c, k, :n] = dst[sel] - k * K
-            m[c, k, :n] = 1
-            w[c, k, :n] = wgt[sel]
+    s.ravel()[flat] = src[order] % K
+    d.ravel()[flat] = dst[order] % K
+    w.ravel()[flat] = wgt[order]
+    m = (np.arange(pmax) < counts[:, None]).astype(INT).reshape(C, C, pmax)
     return PairwiseLayout(pair_max=pmax, pb_src_local=s, pb_dst_local=d,
                           pb_valid=m, pb_weight=w)
 
@@ -284,16 +361,22 @@ def ring(n: int, weighted: bool = False, weight_seed: int = 0) -> Graph:
 
 
 def two_cliques(n: int, weighted: bool = False, weight_seed: int = 0) -> Graph:
-    """Two disjoint cliques of size n//2 -- a labelprop ground-truth fixture."""
+    """Two disjoint cliques of size n//2 -- a labelprop ground-truth fixture.
+
+    Built by broadcasting (all ordered pairs minus the diagonal per clique),
+    not the O(n^2) Python pair loop.
+    """
     half = n // 2
-    src, dst = [], []
+    src_parts, dst_parts = [], []
     for base, size in ((0, half), (half, n - half)):
-        for i in range(size):
-            for j in range(size):
-                if i != j:
-                    src.append(base + i)
-                    dst.append(base + j)
-    g = from_edges(n, np.array(src), np.array(dst))
+        i = np.arange(size, dtype=INT)
+        s = np.repeat(i, size)
+        d = np.tile(i, size)
+        keep = s != d
+        src_parts.append(base + s[keep])
+        dst_parts.append(base + d[keep])
+    g = from_edges(n, np.concatenate(src_parts).astype(INT),
+                   np.concatenate(dst_parts).astype(INT))
     return random_weights(g, seed=weight_seed) if weighted else g
 
 

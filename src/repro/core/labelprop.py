@@ -50,7 +50,8 @@ def components_oracle(graph: Graph) -> np.ndarray:
 
 
 def labelprop_parallel(graph: Graph, num_pes: int, strategy: str = "sortdest",
-                       segment_fn=None) -> tuple[np.ndarray, int]:
-    pg = partition(graph, num_pes)
+                       segment_fn=None,
+                       partitioner: str = "contiguous") -> tuple[np.ndarray, int]:
+    pg = partition(graph, num_pes, partitioner=partitioner)
     eng = Engine(pg, strategy=strategy, segment_fn=segment_fn)
     return eng.labelprop()

@@ -114,13 +114,14 @@ def make_program(name: str, **params) -> VertexProgram:
 
 
 def run_parallel(graph: Graph, algorithm: str, num_pes: int = 1,
-                 strategy: str = "sortdest", segment_fn=None, **params):
+                 strategy: str = "sortdest", segment_fn=None,
+                 partitioner: str = "contiguous", **params):
     """Partition + engine + run, in one call (tests and examples)."""
     from repro.core.engine import Engine
     from repro.core.graph import partition
 
-    eng = Engine(partition(graph, num_pes), strategy=strategy,
-                 segment_fn=segment_fn)
+    eng = Engine(partition(graph, num_pes, partitioner=partitioner),
+                 strategy=strategy, segment_fn=segment_fn)
     return eng.run(algorithm, **params)
 
 
@@ -133,12 +134,14 @@ def _f32(x):
 
 
 def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None):
-    """[C, K] state filled with ``fill``; ``source`` (global id) set to 0."""
+    """[C, K] state filled with ``fill``; ``source`` (an *original* vertex id,
+    translated through the partitioner's relabel) set to 0."""
     s = np.full((pg.num_chunks, pg.chunk_size), fill, dtype=dtype)
     if source is not None:
         if not 0 <= source < pg.graph.num_vertices:
             raise ValueError(f"source {source} out of range")
-        s[source // pg.chunk_size, source % pg.chunk_size] = 0
+        pos = int(pg.global_to_local[source])
+        s[pos // pg.chunk_size, pos % pg.chunk_size] = 0
     return s
 
 
@@ -198,9 +201,11 @@ def pagerank_weighted_serial(graph: Graph, alpha: float = 0.85,
 
 def _make_labelprop(max_iters: int = 10_000) -> VertexProgram:
     def init(pg):
-        base = np.arange(pg.padded_vertices, dtype=np.int32)
-        base = base.reshape(pg.num_chunks, pg.chunk_size)
-        return np.where(pg.vertex_valid > 0, base, INT_SENTINEL).astype(np.int32)
+        # labels are ORIGINAL vertex ids (not padded ids), so the converged
+        # min-label per component matches the serial reference bit-for-bit
+        # under any partitioner permutation
+        base = pg.local_to_global.reshape(pg.num_chunks, pg.chunk_size)
+        return np.where(base >= 0, base, INT_SENTINEL).astype(np.int32)
 
     return VertexProgram(
         name="labelprop",

@@ -40,6 +40,26 @@ lp_ok = all(
     for s in ("reduction", "sortdest", "basic", "pairs") for pes in (2, 4))
 results["labelprop_ok"] = bool(lp_ok)
 
+# ---- 1b) partitioner policies at real multi-PE: permuted placement must be
+# invisible at the API boundary (sources in original ids, results unpermuted)
+from repro.core import random_weights, run_parallel, sssp_serial, bfs_serial
+gw = random_weights(g, seed=5)
+sssp_ref, _ = sssp_serial(gw, source=7)
+bfs_ref, _ = bfs_serial(g, source=7)
+part_ok = True
+for pname in ("contiguous", "edge_balanced", "striped", "degree_sorted"):
+    for pes in (2, 8):
+        got_s, _ = run_parallel(gw, "sssp", num_pes=pes, strategy="sortdest",
+                                partitioner=pname, source=7)
+        got_b, _ = run_parallel(g, "bfs", num_pes=pes, strategy="basic",
+                                partitioner=pname, source=7)
+        part_ok &= bool(np.array_equal(got_s, sssp_ref))
+        part_ok &= bool(np.array_equal(got_b, bfs_ref))
+    got_l, _ = run_parallel(gu, "labelprop", num_pes=4, strategy="pairs",
+                            partitioner=pname)
+    part_ok &= bool(np.array_equal(got_l, oracle))
+results["partitioner_ok"] = bool(part_ok)
+
 # ---- 2) sharded MoE == dense reference ------------------------------------
 from repro.models.config import ModelConfig
 from repro.models import moe as MOE
@@ -148,6 +168,7 @@ def test_multidevice_suite():
     res = json.loads(line[len("RESULTS "):])
     assert res["pagerank_max_err"] < 1e-3
     assert res["labelprop_ok"]
+    assert res["partitioner_ok"]
     assert res["moe_err"] == 0.0
     assert res["ring_attn_err"] < 2e-6
     assert res["train_loss_delta"] < 1e-3

@@ -1,0 +1,335 @@
+"""Partitioning layer: registry, plan invariants, relabel correctness,
+degenerate partitions, imbalance accounting, and vectorized-prep speed.
+
+The relabel invariant under test everywhere: programs and chare arrays live
+in permuted padded-id space, but *callers* only ever see original vertex ids
+(sources go in as original ids, results come out in original order).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partitioners as PT
+from repro.core import run_parallel
+
+ALL_PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
+ALL_STRATEGIES = ("reduction", "sortdest", "basic", "pairs")
+
+# Degenerate shapes the padding/relabel machinery must survive: a single
+# vertex, isolated (edgeless) vertices, V not divisible by P, and splits
+# where some chunk owns zero edges (or zero vertices).
+DEGENERATE = {
+    "single_vertex": lambda: G.from_edges(
+        1, np.array([], np.int32), np.array([], np.int32)),
+    "isolated_vertices": lambda: G.from_edges(  # vertices 3..6 edgeless
+        7, np.array([0, 1], np.int32), np.array([1, 2], np.int32)),
+    "indivisible": lambda: G.ring(13),  # 13 vertices, P in {2,3,4,5}
+    "empty_chunk": lambda: G.from_edges(  # all edges in the low ids
+        9, np.array([0, 0, 1], np.int32), np.array([1, 2, 2], np.int32)),
+}
+
+
+def _reconstruct(pg, s_arr, d_arr, m_arr, w_arr):
+    """(src, dst, w) triples in ORIGINAL ids from a padded layout."""
+    l2g = pg.local_to_global
+    rec = []
+    for c in range(pg.num_chunks):
+        sel = m_arr[c] == 1
+        padded_src = s_arr[c][sel] + c * pg.chunk_size
+        rec.extend(zip(l2g[padded_src].tolist(),
+                       l2g[d_arr[c][sel]].tolist(),
+                       w_arr[c][sel].tolist()))
+    return sorted(rec)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents():
+    names = PT.partitioner_names()
+    for expected in ALL_PARTITIONERS:
+        assert expected in names
+    with pytest.raises(ValueError):
+        PT.get_partitioner("metis")
+    with pytest.raises(ValueError):
+        PT.register_partitioner(PT.PartitionerSpec(
+            "contiguous", lambda g, c: None, wins="dup"))
+    with pytest.raises(ValueError):
+        PT.make_plan(G.ring(4), 0)
+
+
+# ---------------------------------------------------------------------------
+# Plan / relabel invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", ALL_PARTITIONERS)
+@pytest.mark.parametrize("chunks", (1, 2, 3, 5))
+def test_plan_invariants(pname, chunks):
+    g = G.rmat(6, 300, seed=2, weighted=True)
+    plan = PT.make_plan(g, chunks, pname)
+    V = g.num_vertices
+    assert sorted(plan.order.tolist()) == list(range(V))
+    assert int(plan.chunk_counts.sum()) == V
+    assert (plan.chunk_counts >= 0).all()
+    assert plan.chunk_size >= int(plan.chunk_counts.max())
+    g2l, l2g = plan.relabel()
+    assert np.array_equal(l2g[g2l], np.arange(V))  # roundtrip
+    assert np.all((0 <= g2l) & (g2l < chunks * plan.chunk_size))
+    pad = np.ones(chunks * plan.chunk_size, bool)
+    pad[g2l] = False
+    assert (l2g[pad] == -1).all()
+    assert int(plan.edges_per_chunk(g).sum()) == g.num_edges
+
+
+def test_contiguous_is_identity_relabel():
+    for n, chunks in ((12, 4), (13, 4), (1, 3)):
+        pg = G.partition(G.ring(n) if n > 1 else DEGENERATE["single_vertex"](),
+                         chunks)
+        assert np.array_equal(pg.global_to_local, np.arange(n))
+
+
+def test_striped_round_robin():
+    plan = PT.make_plan(G.ring(11), 3, "striped")
+    assert np.array_equal(plan.vertex_chunk, np.arange(11) % 3)
+
+
+def test_degree_sorted_spreads_hubs():
+    # star graph: hub 0 plus a second-tier of mid-degree vertices
+    src = np.concatenate([np.zeros(20, np.int32),
+                          np.array([1, 1, 1, 2, 2], np.int32)])
+    dst = np.concatenate([np.arange(1, 21, dtype=np.int32),
+                          np.array([3, 4, 5, 6, 7], np.int32)])
+    g = G.from_edges(21, src, dst)
+    plan = PT.make_plan(g, 4, "degree_sorted")
+    vc = plan.vertex_chunk
+    # the 4 highest-degree vertices land on 4 distinct chares
+    top4 = np.argsort(-g.out_degrees.astype(np.int64), kind="stable")[:4]
+    assert len(set(vc[top4].tolist())) == 4
+    # vertex counts balanced to within one
+    assert plan.chunk_counts.max() - plan.chunk_counts.min() <= 1
+
+
+def test_edge_balanced_reduces_max_chare_edges():
+    """Acceptance: on a power-law RMAT graph, edge_balanced's heaviest chare
+    owns fewer edges than contiguous's (the paper's imbalance, fixed)."""
+    g = G.rmat(10, 1 << 14, seed=1)
+    for chunks in (4, 8):
+        contig = PT.partition_stats(G.partition(g, chunks))
+        balanced = PT.partition_stats(
+            G.partition(g, chunks, partitioner="edge_balanced"))
+        assert balanced["max_edges"] < contig["max_edges"]
+        assert balanced["edge_imbalance"] < contig["edge_imbalance"]
+
+
+def test_partition_stats_fields():
+    pg = G.partition(G.ring(8), 4, partitioner="striped")
+    st = PT.partition_stats(pg)
+    assert st["partitioner"] == "striped"
+    assert st["edges_per_chare"].tolist() == [2, 2, 2, 2]
+    assert st["vertices_per_chare"].tolist() == [2, 2, 2, 2]
+    assert st["edge_imbalance"] == 1.0
+    assert st["vertex_padding_waste"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Layout correctness under every policy (host-side, any chunk count)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", ALL_PARTITIONERS)
+@pytest.mark.parametrize("gname", sorted(DEGENERATE))
+def test_degenerate_layouts_preserve_edges(pname, gname):
+    g = DEGENERATE[gname]()
+    want = sorted(zip(g.src.tolist(), g.dst.tolist(),
+                      g.edge_weights.tolist()))
+    for chunks in (1, 2, 3, 5):
+        pg = G.partition(g, chunks, partitioner=pname)
+        for layout in [(pg.src_local, pg.dst_global, pg.edge_valid,
+                        pg.edge_weight),
+                       (pg.sd_src_local, pg.sd_dst_global, pg.sd_edge_valid,
+                        pg.sd_edge_weight)]:
+            assert _reconstruct(pg, *layout) == want, (pname, gname, chunks)
+        pw = G.build_pairwise(pg)
+        assert int(pw.pb_valid.sum()) == g.num_edges
+
+
+@pytest.mark.parametrize("pname", ALL_PARTITIONERS)
+def test_permuted_sortdest_layout_is_dest_sorted(pname):
+    g = G.rmat(5, 150, seed=6)
+    pg = G.partition(g, 2, partitioner=pname)
+    for c in range(pg.num_chunks):
+        sel = pg.sd_edge_valid[c] == 1
+        d = pg.sd_dst_global[c][sel]
+        assert np.all(np.diff(d) >= 0), "edges must be sorted by padded dest"
+
+
+# ---------------------------------------------------------------------------
+# Engine correctness on degenerate graphs: all partitioners x all strategies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("pname", ALL_PARTITIONERS)
+def test_degenerate_graphs_all_policies_all_strategies(pname, strategy):
+    from repro.core import programs as P
+
+    for gname, gf in DEGENERATE.items():
+        g = gf()
+        ref, _ = P.bfs_serial(g, source=0)
+        got, _ = run_parallel(g, "bfs", num_pes=1, strategy=strategy,
+                              partitioner=pname, source=0)
+        assert np.array_equal(got, ref), (pname, strategy, gname)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized prep speed (acceptance: beats the seed's per-chunk loops)
+# ---------------------------------------------------------------------------
+
+
+def _partition_loop_seed(graph, num_chunks):
+    """The seed's per-chunk-loop layout build (contiguous policy), kept as
+    the baseline for the vectorization speed test."""
+    n = graph.num_vertices
+    chunk_size = -(-n // num_chunks)
+    src, dst = graph.src, graph.dst
+    wgt = graph.edge_weights
+    owner = src // chunk_size
+    per_chunk_e = np.bincount(owner, minlength=num_chunks)
+    emax = max(int(per_chunk_e.max()) if len(src) else 1, 1)
+
+    def _layout(order_key):
+        s = np.zeros((num_chunks, emax), dtype=G.INT)
+        d = np.zeros((num_chunks, emax), dtype=G.INT)
+        m = np.zeros((num_chunks, emax), dtype=G.INT)
+        w = np.ones((num_chunks, emax), dtype=G.WEIGHT)
+        for c in range(num_chunks):
+            sel = np.flatnonzero(owner == c)
+            if order_key is not None and len(sel):
+                sel = sel[np.lexsort(order_key(sel))]
+            k = len(sel)
+            s[c, :k] = src[sel] - c * chunk_size
+            d[c, :k] = dst[sel]
+            m[c, :k] = 1
+            w[c, :k] = wgt[sel]
+        return s, d, m, w
+
+    basic = _layout(None)
+    sd = _layout(lambda sel: (dst[sel], dst[sel] // chunk_size))
+    return basic, sd
+
+
+def _pairwise_loop_seed(pg):
+    """The seed's O(C^2) pairwise bucket loop."""
+    src, dst = pg.graph.src, pg.graph.dst
+    wgt = pg.graph.edge_weights
+    K, C = pg.chunk_size, pg.num_chunks
+    sc, dc = src // K, dst // K
+    counts = np.zeros((C, C), dtype=np.int64)
+    np.add.at(counts, (sc, dc), 1)
+    pmax = max(int(counts.max()), 1)
+    s = np.zeros((C, C, pmax), dtype=G.INT)
+    d = np.zeros((C, C, pmax), dtype=G.INT)
+    m = np.zeros((C, C, pmax), dtype=G.INT)
+    w = np.ones((C, C, pmax), dtype=G.WEIGHT)
+    for c in range(C):
+        for k in range(C):
+            sel = np.flatnonzero((sc == c) & (dc == k))
+            nsel = len(sel)
+            s[c, k, :nsel] = src[sel] - c * K
+            d[c, k, :nsel] = dst[sel] - k * K
+            m[c, k, :nsel] = 1
+            w[c, k, :nsel] = wgt[sel]
+    return s, d, m, w
+
+
+def _race(fn_a, fn_b, repeats=5):
+    """Best-of-N for two contenders, interleaved so a load spike on a shared
+    CI runner hits both rather than biasing one."""
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def test_vectorized_layouts_match_seed_loops():
+    g = G.rmat(8, 3000, seed=9, weighted=True)
+    pg = G.partition(g, 4)
+    (b_s, b_d, b_m, b_w), (sd_s, sd_d, sd_m, sd_w) = _partition_loop_seed(g, 4)
+    np.testing.assert_array_equal(pg.src_local, b_s)
+    np.testing.assert_array_equal(pg.dst_global, b_d)
+    np.testing.assert_array_equal(pg.edge_valid, b_m)
+    np.testing.assert_array_equal(pg.edge_weight, b_w)
+    np.testing.assert_array_equal(pg.sd_edge_valid, sd_m)
+    # sortdest: seed's lexsort tie-break may differ among equal-dest edges;
+    # compare the (src, dst, w) multiset per row instead of raw order
+    for c in range(4):
+        got = sorted(zip(pg.sd_src_local[c][pg.sd_edge_valid[c] == 1],
+                         pg.sd_dst_global[c][pg.sd_edge_valid[c] == 1],
+                         pg.sd_edge_weight[c][pg.sd_edge_valid[c] == 1]))
+        want = sorted(zip(sd_s[c][sd_m[c] == 1], sd_d[c][sd_m[c] == 1],
+                          sd_w[c][sd_m[c] == 1]))
+        assert got == want
+    pw = G.build_pairwise(pg)
+    s, d, m, w = _pairwise_loop_seed(pg)
+    np.testing.assert_array_equal(pw.pb_valid, m)
+    np.testing.assert_array_equal(pw.pb_src_local, s)
+    np.testing.assert_array_equal(pw.pb_dst_local, d)
+    np.testing.assert_array_equal(pw.pb_weight, w)
+
+
+@pytest.mark.slow
+def test_vectorized_prep_faster_than_seed_loops():
+    """Acceptance: partition + build_pairwise prep on soc-lj1-mini at 8 PEs
+    beats the seed's per-chunk/per-pair Python loops."""
+    g = G.load_dataset("soc-lj1-mini")  # scale 15: ~32k vertices, ~450k edges
+    pes = 8
+
+    def prep_vectorized():
+        G.build_pairwise(G.partition(g, pes))
+
+    pg = G.partition(g, pes)
+
+    def prep_loops():
+        _partition_loop_seed(g, pes)
+        _pairwise_loop_seed(pg)
+
+    prep_vectorized(), prep_loops()  # warm caches
+    t_vec, t_loop = _race(prep_vectorized, prep_loops)
+    assert t_vec < t_loop, f"vectorized {t_vec:.3f}s vs loops {t_loop:.3f}s"
+
+
+# ---------------------------------------------------------------------------
+# two_cliques vectorization guard (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _two_cliques_loop(n):
+    half = n // 2
+    src, dst = [], []
+    for base, size in ((0, half), (half, n - half)):
+        for i in range(size):
+            for j in range(size):
+                if i != j:
+                    src.append(base + i)
+                    dst.append(base + j)
+    return G.from_edges(n, np.asarray(src, np.int32),
+                        np.asarray(dst, np.int32))
+
+
+@pytest.mark.parametrize("n", (2, 3, 4, 5, 10, 11, 40))
+def test_two_cliques_matches_loop_version(n):
+    fast, slow = G.two_cliques(n), _two_cliques_loop(n)
+    assert fast.num_vertices == slow.num_vertices == n
+    assert (sorted(zip(fast.src.tolist(), fast.dst.tolist()))
+            == sorted(zip(slow.src.tolist(), slow.dst.tolist())))

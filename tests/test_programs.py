@@ -1,21 +1,26 @@
-"""VertexProgram layer: registry, serial references, and the cross-strategy
-equivalence sweep that keeps future strategy work honest.
+"""VertexProgram layer: registry, serial references, and the cross-strategy /
+cross-partitioner equivalence sweep that keeps future strategy and placement
+work honest.
 
-Every registered program x every strategy x {ring, two_cliques, small RMAT}
-must match its serial reference: bit-for-bit for min-monoid programs
-(labelprop, sssp, bfs), to 1e-3 for add-monoid programs (pagerank variants).
+Every registered program x every strategy x every partitioner x
+{ring, two_cliques, small RMAT} must match its serial reference: bit-for-bit
+for min-monoid programs (labelprop, sssp, bfs), to 1e-3 for add-monoid
+programs (pagerank variants).  SSSP/BFS sources are given in *original*
+vertex ids (the relabel invariant: permuted placement must be invisible at
+the API boundary).
 """
 
 import numpy as np
 import pytest
 
 from repro.core import (Engine, get_spec, make_program, partition,
-                        registered_names, ring, rmat, run_parallel,
-                        two_cliques)
+                        partitioner_names, registered_names, ring, rmat,
+                        run_parallel, two_cliques)
 from repro.core import programs as P
 from repro.core.graph import from_edges, random_weights
 
 STRATEGIES = ("reduction", "sortdest", "basic", "pairs")
+PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
 
 GRAPHS = {
     "ring": lambda: ring(12),
@@ -31,18 +36,30 @@ def _graph_for(spec, gname):
     return spec.prepare_graph(g)
 
 
+def _params_for(spec):
+    # a non-zero source exercises the global->local source translation
+    return {"source": 3} if "source" in spec.defaults else {}
+
+
+@pytest.mark.parametrize("partitioner", PARTITIONERS)
 @pytest.mark.parametrize("strategy", STRATEGIES)
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 @pytest.mark.parametrize("name", sorted(P.PROGRAMS))
-def test_cross_strategy_equivalence(name, gname, strategy):
+def test_cross_strategy_equivalence(name, gname, strategy, partitioner):
     spec = get_spec(name)
     g = _graph_for(spec, gname)
-    ref = spec.run_serial(g)
-    got, iters = run_parallel(g, name, num_pes=1, strategy=strategy)
+    params = _params_for(spec)
+    ref = spec.run_serial(g, **params)
+    got, iters = run_parallel(g, name, num_pes=1, strategy=strategy,
+                              partitioner=partitioner, **params)
     assert iters >= 1
     assert spec.matches(got, ref), (
-        f"{name}/{gname}/{strategy}: max deviation "
+        f"{name}/{gname}/{strategy}/{partitioner}: max deviation "
         f"{np.max(np.abs(np.asarray(got, np.float64) - np.asarray(ref, np.float64)))}")
+
+
+def test_partitioner_registry_matches_sweep():
+    assert sorted(PARTITIONERS) == sorted(partitioner_names())
 
 
 def test_registry_contents():
