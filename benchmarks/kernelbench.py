@@ -3,8 +3,18 @@
 The Pallas kernels target TPU; on this CPU container they execute through
 the interpreter (correctness only), so the numbers that are *measured* here
 are the jit'd pure-jnp reference pipeline (what the engine actually runs on
-CPU), plus the kernels' analytic TPU cost model (MXU one-hot matmul flops /
-VMEM traffic) for the roofline narrative.
+CPU), plus the kernels' analytic TPU cost model for the roofline narrative.
+
+Two kernel paths are modeled and validated side by side (ISSUE 3 /
+DESIGN.md section 8):
+
+  staged  gather + scatter as separate dense-grid ``pallas_call``s (3 jitted
+          stages with the weight transform between them); tile work
+          O((E/BE)*(V/BV) + (S/BS)*(E/BE)) and the [E] intermediate makes a
+          full HBM round trip.
+  fused   one band-pruned launch: tile work is the sum of per-edge-block
+          band widths (the partition-time ``band``/``sd_band`` metadata),
+          and the intermediate never leaves VMEM.
 """
 
 from __future__ import annotations
@@ -16,7 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
-from repro.kernels.push_sum import BLOCK_E, BLOCK_S, BLOCK_V
+from repro.kernels.blocks import (BLOCK_E, BLOCK_S, BLOCK_V, band_tiles,
+                                  num_edge_blocks)
+
+# launch/stage counts per push: staged = gather kernel + weight stage +
+# scatter kernel; fused = one pallas_call
+LAUNCHES = {"staged": 3, "fused": 1}
 
 
 def bench_ref(E=1 << 16, V=1 << 14, repeats=5, seed=0):
@@ -36,27 +51,84 @@ def bench_ref(E=1 << 16, V=1 << 14, repeats=5, seed=0):
     return best, E
 
 
-def kernel_cost_model(E=1 << 16, V=1 << 14):
-    """Analytic TPU cost of the one-hot-matmul push kernel (per call)."""
-    ne, nv, ns = -(-E // BLOCK_E), -(-V // BLOCK_V), -(-V // BLOCK_S)
-    # gather: grid ne*nv matmuls [BE,BV]x[BV]; scatter: ns*ne [BE,BS]^T x [BE]
-    flops = ne * nv * 2 * BLOCK_E * BLOCK_V + ns * ne * 2 * BLOCK_E * BLOCK_S
-    hbm = (E * 4 * 3 + V * 4 * 2) * 2  # indices+values in, out, both halves
+def kernel_cost_model(E=1 << 16, V=1 << 14, S=None, band=None, chares=1,
+                      weighted=False):
+    """Analytic TPU cost of one push superstep, staged vs fused.
+
+    ``E`` is the (padded) edge count per chare, ``V`` the gather-side vertex
+    count per chare, ``S`` the scatter-side segment count (defaults to
+    ``V``), ``chares`` the number of per-chare sweeps in the superstep,
+    ``weighted`` whether a per-edge weight stream rides along (SSSP,
+    weighted PageRank; BFS's "unit" transform is a compile-time constant
+    and streams nothing).
+
+    Tile counts: the staged dense grid visits every (edge-block x
+    vertex-block) gather tile and (segment-block x edge-block) scatter tile;
+    the fused kernel visits only the in-band tiles recorded in ``band``
+    (``[..., 4, NB]`` metadata from ``blocks.edge_bands``, pre-summed over
+    all its chares; when absent the fused path is modeled at its worst
+    case == the dense grid).
+
+    Flops: every visited tile is one [BLOCK_E, BLOCK] one-hot matmul
+    (2*BE*B flops).  HBM bytes: the staged path moves indices+values in and
+    the [E] intermediate out *per half* (2 launches); the fused path reads
+    the edge arrays + band table once and keeps vals/out resident in VMEM
+    for the whole sweep -- the intermediate contributes zero HBM traffic.
+    """
+    if S is None:
+        S = V
+    ne = num_edge_blocks(E)
+    nv, ns = -(-V // BLOCK_V), -(-S // BLOCK_S)
+    dense_tiles = chares * (ne * nv + ns * ne)
+    fused_tiles = band_tiles(np.asarray(band)) if band is not None \
+        else dense_tiles
+    tile_flops = 2 * BLOCK_E * BLOCK_V  # == 2*BE*BS; square blocks
+    staged_flops = dense_tiles * tile_flops
+    fused_flops = fused_tiles * tile_flops
+    # per-edge data: src+dst+valid (+weight when streamed) in; vals in,
+    # out out; the staged path additionally round-trips the [E] intermediate
+    edge_bytes = chares * E * 4 * (4 if weighted else 3)
+    vert_bytes = chares * (V + S) * 4
+    staged_hbm = (edge_bytes + vert_bytes) * 2 + chares * E * 4 * 2
+    fused_hbm = edge_bytes + vert_bytes + chares * ne * 4 * 4  # + band table
+    model = lambda f, b: {
+        "flops": f,
+        "hbm_bytes": b,
+        "mxu_s": f / 197e12,
+        "hbm_s": b / 819e9,
+        "bound": "memory" if b / 819e9 > f / 197e12 else "compute",
+    }
     return {
-        "flops": flops,
-        "hbm_bytes": hbm,
-        "mxu_s": flops / 197e12,
-        "hbm_s": hbm / 819e9,
-        "bound": "memory" if hbm / 819e9 > flops / 197e12 else "compute",
+        "staged": {"tiles": dense_tiles, "launches": LAUNCHES["staged"],
+                   **model(staged_flops, staged_hbm)},
+        "fused": {"tiles": fused_tiles, "launches": LAUNCHES["fused"],
+                  **model(fused_flops, fused_hbm)},
+        "tile_ratio": dense_tiles / max(fused_tiles, 1),
+        "tile_occupancy": fused_tiles / dense_tiles,
     }
 
 
-def validate(E=4096, V=2048, seed=1):
+def layout_cost_model(pg, layout="sd"):
+    """``kernel_cost_model`` fed by a real partition's band metadata: one
+    fused sweep per chare per superstep, bands summed over all chares."""
+    band = pg.sd_band if layout == "sd" else pg.band
+    return kernel_cost_model(
+        E=pg.sd_src_local.shape[1], V=pg.chunk_size,
+        S=pg.num_chunks * pg.chunk_size, band=band, chares=pg.num_chunks)
+
+
+def validate(E=4096, V=2048, seed=1, fused=True):
+    """Max |err| of one push path vs the pure-jnp oracle (CI smoke)."""
     rng = np.random.default_rng(seed)
     src = jnp.asarray(rng.integers(0, V, E), jnp.int32)
     dst = jnp.asarray(rng.integers(0, V, E), jnp.int32)
     valid = jnp.asarray(rng.integers(0, 2, E), jnp.int32)
     vals = jnp.asarray(rng.normal(size=V), jnp.float32)
-    got = ops.push(vals, src, dst, valid, V, combine="add")
+    got = ops.push(vals, src, dst, valid, V, combine="add", fused=fused)
     want = ref.push_ref(vals, src, dst, valid, V, combine="add")
-    return float(jnp.max(jnp.abs(got - want)))
+    add_err = float(jnp.max(jnp.abs(got - want)))
+    ivals = jnp.asarray(rng.integers(0, 10_000, V), jnp.int32)
+    got = ops.push(ivals, src, dst, valid, V, combine="min", fused=fused)
+    want = ref.push_ref(ivals, src, dst, valid, V, combine="min")
+    min_err = float(jnp.max(jnp.abs(got - want)))
+    return max(add_err, min_err)

@@ -1,6 +1,6 @@
 """Benchmark entry point: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale 13] [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--scale 13] [--quick] [--json]
 
 Prints ``name,seconds_or_value,derived`` CSV rows:
   table2.*   PageRank runtimes      (paper Table 2 / Figures 3-5)
@@ -11,9 +11,15 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
   imbalance.* per-chare load skew + padding waste per partitioner policy
   wire.*     analytic per-device wire bytes on the production mesh
-  kernel.*   push-kernel reference timing + TPU cost model
+  kernel.*   push-kernel validation + timing + staged/fused TPU cost model
   roofline.* dry-run roofline aggregates (reads experiments/dryrun/)
   cost.*     the COST verdict per algorithm
+
+``--json`` additionally writes the machine-readable perf trajectory --
+``BENCH_cost.json`` (per-algo serial baseline, best actor time, COST
+verdict) and ``BENCH_kernels.json`` (validation errors, band-pruned tile
+counts/occupancy, fused-vs-staged launch counts) -- so future PRs can diff
+performance against this one.
 
 The table/cost sections iterate the vertex-program registry; adding an
 algorithm in ``repro.core.programs`` adds its rows here with no harness
@@ -23,6 +29,7 @@ changes.
 from __future__ import annotations
 
 import argparse
+import json
 
 
 def emit(name, value, derived=""):
@@ -35,17 +42,22 @@ def main():
                     help="log2 vertices for the scaled paper graphs")
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs / fewer repeats")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_cost.json + BENCH_kernels.json")
     args = ap.parse_args()
     scale = 11 if args.quick else args.scale
     repeats = 2 if args.quick else 3
 
     from benchmarks import kernelbench, roofline, tables
-    from repro.core import get_spec, registered_names
+    from repro.core import get_spec, load_dataset, partition, registered_names
 
     # quick mode keeps the engine sweep on the default placement; the full
     # run also measures the edge-balanced policy per strategy
     partitioners = (("contiguous",) if args.quick
                     else ("contiguous", "edge_balanced"))
+
+    cost_json = {"schema": 1, "scale_log2": scale, "quick": args.quick,
+                 "algorithms": {}}
 
     # ---- Tables 2-6 + Figures 1/2 (one per registered program) ------------
     for algo in registered_names():
@@ -53,16 +65,21 @@ def main():
         rows = tables.run_table(algo, scale_log2=scale, repeats=repeats,
                                 partitioners=partitioners)
         serial = {g: t for g, impl, p, t, ok in rows if impl == "serial"}
-        best_actor = {}
+        best_actor, best_impl = {}, {}
         for g, impl, pes, t, ok in rows:
             assert ok, f"{algo}/{g}/{impl} produced wrong output"
             emit(f"{table}.{g}.{impl}@{pes}", f"{t:.4f}")
-            if impl not in ("serial", "dataflow"):
-                best_actor[g] = min(best_actor.get(g, float("inf")), t)
+            if impl not in ("serial", "dataflow") \
+                    and t < best_actor.get(g, float("inf")):
+                best_actor[g], best_impl[g] = t, f"{impl}@{pes}"
+        algo_json = {}
         for g, t in best_actor.items():
             cost = 1 if t <= serial[g] else "inf(1PE)"
             emit(f"cost.{algo}.{g}", cost,
                  f"best_actor={t:.4f}s serial={serial[g]:.4f}s")
+            algo_json[g] = {"serial_s": serial[g], "best_actor_s": t,
+                            "best_impl": best_impl[g], "cost": cost}
+        cost_json["algorithms"][algo] = algo_json
         for g, impl, pes, t, ok in rows:
             if impl == "dataflow":
                 emit(f"fig12.{algo}.{g}.dataflow_vs_serial",
@@ -81,13 +98,36 @@ def main():
         emit(f"wire.{g}.{variant}@{pes}", f"{bytes_:.3e}", "bytes/device/iter")
 
     # ---- kernels -----------------------------------------------------------
-    err = kernelbench.validate()
-    emit("kernel.push.validation_maxerr", f"{err:.2e}")
+    err_staged = kernelbench.validate(fused=False)
+    err_fused = kernelbench.validate(fused=True)
+    emit("kernel.push.staged_maxerr", f"{err_staged:.2e}")
+    emit("kernel.push.fused_maxerr", f"{err_fused:.2e}")
     t, E = kernelbench.bench_ref()
     emit("kernel.push.ref_jnp", f"{t:.4f}", f"{E / t / 1e6:.1f} Medges/s")
-    cm = kernelbench.kernel_cost_model()
-    emit("kernel.push.tpu_model", f"{max(cm['mxu_s'], cm['hbm_s']):.2e}",
-         f"bound={cm['bound']}")
+    # band-pruned tile counts on the scale-13 RMAT stand-in's real layout
+    pg = partition(load_dataset("soc-lj1-mini", scale_log2=scale), 8)
+    cm = kernelbench.layout_cost_model(pg)
+    emit("kernel.push.tiles_staged", cm["staged"]["tiles"],
+         f"launches={cm['staged']['launches']}")
+    emit("kernel.push.tiles_fused", cm["fused"]["tiles"],
+         f"launches={cm['fused']['launches']} "
+         f"occupancy={cm['tile_occupancy']:.3f}")
+    emit("kernel.push.tile_ratio", f"{cm['tile_ratio']:.2f}",
+         "dense/fused, >=4 expected on power-law graphs")
+    for path in ("staged", "fused"):
+        emit(f"kernel.push.tpu_model_{path}",
+             f"{max(cm[path]['mxu_s'], cm[path]['hbm_s']):.2e}",
+             f"bound={cm[path]['bound']}")
+
+    kernels_json = {
+        "schema": 1,
+        "scale_log2": scale,
+        "validation": {"staged_maxerr": err_staged,
+                       "fused_maxerr": err_fused},
+        "ref_jnp": {"seconds": t, "medges_per_s": E / t / 1e6},
+        "cost_model": cm,
+        "launches": dict(kernelbench.LAUNCHES),
+    }
 
     # ---- roofline aggregates ----------------------------------------------
     recs = roofline.load_records()
@@ -97,6 +137,13 @@ def main():
             emit(f"roofline.{k}", v)
     else:
         emit("roofline.cells_compiled", 0, "run repro.launch.dryrun first")
+
+    if args.json:
+        for fname, payload in (("BENCH_cost.json", cost_json),
+                               ("BENCH_kernels.json", kernels_json)):
+            with open(fname, "w") as f:
+                json.dump(payload, f, indent=2, default=float)
+            emit(f"json.{fname}", "written")
 
 
 if __name__ == "__main__":

@@ -58,7 +58,9 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
     symmetrizes / attaches weights; ``ProgramSpec.prepare_graph`` helps).
     Extra keyword args are forwarded to the program (e.g. ``source=0``).
     Each (partitioner, PE count) cell is partitioned ONCE and shared across
-    every strategy -- prep cost does not multiply with the strategy count.
+    every strategy -- prep cost does not multiply with the strategy count,
+    and the layout device buffers upload once per cell (engines alias the
+    ``PartitionedGraph`` device cache instead of re-transferring).
     """
     import jax
 

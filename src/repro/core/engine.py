@@ -27,9 +27,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import strategies as strat
-from repro.core.graph import PartitionedGraph, build_pairwise
+from repro.core.graph import PartitionedGraph
 
 AXIS = strat.AXIS
+
+# Donating the superstep state buffer lets XLA reuse its allocation for the
+# output across the iteration loop; the CPU backend does not implement
+# donation (it would only warn), so gate on the backend.
+_DONATE = jax.default_backend() in ("tpu", "gpu")
 
 
 def make_pe_mesh(num_pes: int):
@@ -51,6 +56,8 @@ class Engine:
     strategy: str = "sortdest"
     mesh: object = None
     segment_fn: object = None  # optional kernel override for local combines
+    push_fn: object = None  # optional fused-kernel override for the whole
+    #                         gather/transform/combine loop (ops.make_push_fn)
 
     def __post_init__(self):
         if self.strategy not in strat.STRATEGIES:
@@ -60,29 +67,16 @@ class Engine:
             self.mesh = make_pe_mesh(self.pg.num_chunks)
         if self.pg.num_chunks != self.mesh.devices.size:
             raise ValueError("num_chunks must equal mesh size")
-        pg = self.pg
+        # layouts are uploaded once per PartitionedGraph and shared: engines
+        # built on the same partition (a strategy sweep) alias the same
+        # device buffers instead of re-transferring them per Engine
         if self.strategy in strat.PAIRWISE:
-            pw = build_pairwise(pg)
-            self.arrays = {
-                "pb_src_local": jnp.asarray(pw.pb_src_local),
-                "pb_dst_local": jnp.asarray(pw.pb_dst_local),
-                "pb_valid": jnp.asarray(pw.pb_valid),
-                "pb_weight": jnp.asarray(pw.pb_weight),
-            }
+            self.arrays = self.pg.device_pairwise()
         else:
-            self.arrays = {
-                k: jnp.asarray(getattr(pg, k))
-                for k in ("src_local", "dst_global", "edge_valid", "edge_weight",
-                          "sd_src_local", "sd_dst_global", "sd_edge_valid",
-                          "sd_edge_weight")
-            }
-        self.aux = {
-            "out_degree": jnp.asarray(pg.out_degree),
-            "out_weight": jnp.asarray(pg.out_weight),
-            "vertex_valid": jnp.asarray(pg.vertex_valid),
-        }
+            self.arrays = self.pg.device_arrays()
+        self.aux = self.pg.device_aux()
         self._fn = strat.STRATEGIES[self.strategy]
-        self._C, self._K = pg.num_chunks, pg.chunk_size
+        self._C, self._K = self.pg.num_chunks, self.pg.chunk_size
         self._compiled = {}  # program.key -> jitted fn; timing must not
         #                      rebuild the closure (COST times compute only)
 
@@ -97,9 +91,11 @@ class Engine:
                                 out_specs=(P(AXIS, None), P(AXIS, None)),
                                 check_vma=False)
 
-    def _propagate(self, vals, arrs, combiner, edge_value=None):
+    def _propagate(self, vals, arrs, combiner, edge_value=None,
+                   edge_semiring=None):
         return self._fn(vals, arrs, combiner, self._C, self._K,
-                        segment_fn=self.segment_fn, edge_value=edge_value)
+                        segment_fn=self.segment_fn, edge_value=edge_value,
+                        push_fn=self.push_fn, edge_semiring=edge_semiring)
 
     # -- the one superstep loop ---------------------------------------------
 
@@ -120,7 +116,9 @@ class Engine:
             aux = {k: v[0] for k, v in aux.items()}
 
             def superstep(state, vals):
-                incoming = self._propagate(vals, arrs, comb, program.edge_value)
+                incoming = self._propagate(vals, arrs, comb,
+                                           program.edge_value,
+                                           program.edge_semiring)
                 return program.apply(state, incoming, aux)
 
             if program.fixed_iters is not None:
@@ -168,7 +166,10 @@ class Engine:
         s0 = jnp.asarray(program.init(self.pg))
         fn = self._compiled.get(program.key)
         if fn is None:
-            fn = jax.jit(self._smap(self._make_body(program)))
+            # the state buffer is consumed by the superstep loop: donate it
+            # so the loop carry reuses its allocation (no-op on CPU)
+            fn = jax.jit(self._smap(self._make_body(program)),
+                         donate_argnums=(2,) if _DONATE else ())
             self._compiled[program.key] = fn
         state, iters = fn(self.arrays, self.aux, s0)
         # un-permute: padded-id state -> original vertex order (the relabel

@@ -28,6 +28,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import partitioners as part_mod
+from repro.kernels import blocks
 
 INT = np.int32
 WEIGHT = np.float32
@@ -149,9 +150,9 @@ class PartitionedGraph:
       * ``edge_valid`` [C, Emax] 0/1 padding mask
 
     Sort-destination layout (the paper's best variant -- the same edges
-    re-ordered by (destination chunk, destination vertex) so contributions to
-    one external vertex are adjacent and can be combined locally before
-    sending):
+    re-ordered by (destination segment block, source vertex block,
+    destination vertex) so contributions to one external vertex are adjacent
+    within their tile bucket and can be combined locally before sending):
       * ``sd_src_local``  [C, Emax]
       * ``sd_dst_global`` [C, Emax]
       * ``sd_edge_valid`` [C, Emax]
@@ -161,6 +162,15 @@ class PartitionedGraph:
     apply a program's ``edge_value(v, w)`` transform before combining.
     ``out_weight`` is the per-vertex sum of outgoing weights (1 where the
     vertex has no out-edges, mirroring the ``out_degree`` div-0 clip).
+
+    Band metadata (DESIGN.md section 8): both layouts group edges by
+    (kernel-tile block of the scatter target, kernel-tile block of the gather
+    source) -- the basic layout with the source block outermost, sortdest
+    with the destination segment block outermost -- so each BLOCK_E edge
+    block touches a narrow band of gather/scatter tiles.  ``band`` /
+    ``sd_band`` ([C, 4, NB] int32, rows src_lo/src_hi/seg_lo/seg_hi from
+    ``repro.kernels.blocks.edge_bands``) record those bands for the fused
+    push kernels' sparsity-aware tile dispatch.
     """
 
     graph: Graph
@@ -177,9 +187,16 @@ class PartitionedGraph:
     sd_dst_global: np.ndarray
     sd_edge_valid: np.ndarray
     sd_edge_weight: np.ndarray
+    band: np.ndarray  # [C, 4, NB] fused-kernel bands, basic layout
+    sd_band: np.ndarray  # [C, 4, NB] fused-kernel bands, sortdest layout
     partitioner: str = "contiguous"
     global_to_local: np.ndarray | None = None  # [V] original id -> padded id
     local_to_global: np.ndarray | None = None  # [C*K] padded id -> original/-1
+    # device-upload cache (keyed "dense"/"pairwise"/"aux"): engines built on
+    # the same partition share one resident copy of every layout buffer, so a
+    # PE/strategy sweep uploads each layout once instead of once per Engine
+    _dev: dict = dataclasses.field(default_factory=dict, repr=False,
+                                   compare=False)
 
     @property
     def padded_vertices(self) -> int:
@@ -189,6 +206,48 @@ class PartitionedGraph:
         """Owning chunk of a *padded* id (use ``global_to_local`` first for
         original ids)."""
         return v // self.chunk_size
+
+    def device_arrays(self) -> dict:
+        """Device-resident dense layouts (both edge orders + band metadata),
+        uploaded once per partition and shared by every Engine built on it."""
+        if "dense" not in self._dev:
+            import jax.numpy as jnp
+
+            self._dev["dense"] = {
+                k: jnp.asarray(getattr(self, k))
+                for k in ("src_local", "dst_global", "edge_valid",
+                          "edge_weight", "sd_src_local", "sd_dst_global",
+                          "sd_edge_valid", "sd_edge_weight", "band",
+                          "sd_band")
+            }
+        return self._dev["dense"]
+
+    def device_pairwise(self) -> dict:
+        """Device-resident pairwise (edge-bucketed) layout for the basic
+        variant; built and uploaded on first use, then shared."""
+        if "pairwise" not in self._dev:
+            import jax.numpy as jnp
+
+            pw = build_pairwise(self)
+            self._dev["pairwise"] = {
+                "pb_src_local": jnp.asarray(pw.pb_src_local),
+                "pb_dst_local": jnp.asarray(pw.pb_dst_local),
+                "pb_valid": jnp.asarray(pw.pb_valid),
+                "pb_weight": jnp.asarray(pw.pb_weight),
+            }
+        return self._dev["pairwise"]
+
+    def device_aux(self) -> dict:
+        """Device-resident per-vertex auxiliaries (degree/weight/validity)."""
+        if "aux" not in self._dev:
+            import jax.numpy as jnp
+
+            self._dev["aux"] = {
+                "out_degree": jnp.asarray(self.out_degree),
+                "out_weight": jnp.asarray(self.out_weight),
+                "vertex_valid": jnp.asarray(self.vertex_valid),
+            }
+        return self._dev["aux"]
 
 
 def _stable_argsort_bounded(keys: np.ndarray, bound: int) -> np.ndarray:
@@ -268,14 +327,29 @@ def partition(graph: Graph, num_chunks: int,
     per_chunk_e = np.bincount(owner, minlength=num_chunks)
     emax = max(int(per_chunk_e.max()) if len(src) else 1, 1)
 
-    # basic: local-source order within the chunk (the permuted CSR order)
-    b_order = _stable_argsort_bounded(src, padded)
-    # sort-destination: (owner, dest) -- dest chunk and dest vertex at once,
-    # since padded ids already sort by (chunk, slot)
-    sd_bound = num_chunks * padded
-    key_dtype = INT if sd_bound <= 1 << 31 else np.int64
-    sd_order = _stable_argsort_bounded(
-        owner.astype(key_dtype) * padded + dst, sd_bound)
+    # Both layouts order a chare's edges by coarse tile bucket so the fused
+    # kernels' gather/scatter bands stay narrow (DESIGN.md section 8).  The
+    # tile buckets are kernel blocks of the local source (gather side,
+    # BLOCK_V) and of the padded destination (scatter side, BLOCK_S); the
+    # stable sort keeps the relabeled-CSR order inside each bucket.  One
+    # bounded radix sort per layout yields the lexicographic
+    # (owner, bucket) order that `_pack_edges` needs (owner-grouped); the
+    # bucket count is small enough (C * K/BV * V'/BS) that graphs up to
+    # scale ~18 take a single int16 radix pass.
+    src_blk = (src - owner * chunk_size) // blocks.BLOCK_V
+    seg_blk = dst // blocks.BLOCK_S
+    nsb = -(-chunk_size // blocks.BLOCK_V)
+    nseg = -(-padded // blocks.BLOCK_S)
+    key_bound = num_chunks * nsb * nseg
+    key_dtype = INT if key_bound <= 1 << 31 else np.int64
+    owner_k = owner.astype(key_dtype)
+    # basic: source block outermost (the permuted CSR order, block-granular)
+    b_key = (owner_k * nsb + src_blk) * nseg + seg_blk
+    # sort-destination: destination segment block outermost (the paper's
+    # dest-sorted send order, block-granular)
+    sd_key = (owner_k * nseg + seg_blk) * nsb + src_blk
+    b_order = _stable_argsort_bounded(b_key, key_bound)
+    sd_order = _stable_argsort_bounded(sd_key, key_bound)
     pack = lambda order_idx: _pack_edges(order_idx, src, dst, wgt, owner,
                                          per_chunk_e, num_chunks, chunk_size,
                                          emax)
@@ -283,6 +357,13 @@ def partition(graph: Graph, num_chunks: int,
     sd_s, sd_d, sd_w = pack(sd_order)
     # one validity mask serves both layouts: row c has per_chunk_e[c] edges
     edge_valid = (np.arange(emax) < per_chunk_e[:, None]).astype(INT)
+    # per-edge-block tile bands for the fused kernels' sparsity dispatch,
+    # computed vectorized alongside the layout build (owner-grouped flat
+    # arrays; one reduceat per bound, no [C, Emax] temporaries)
+    bands = lambda order_idx: blocks.edge_bands_grouped(
+        src_blk[order_idx], seg_blk[order_idx], per_chunk_e, emax)
+    band = bands(b_order)
+    sd_band = bands(sd_order)
 
     return PartitionedGraph(
         graph=graph,
@@ -299,6 +380,8 @@ def partition(graph: Graph, num_chunks: int,
         sd_dst_global=sd_d,
         sd_edge_valid=edge_valid,
         sd_edge_weight=sd_w,
+        band=band,
+        sd_band=sd_band,
         partitioner=partitioner,
         global_to_local=g2l,
         local_to_global=l2g,
@@ -341,10 +424,11 @@ def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
     s = np.zeros((C, C, pmax), dtype=INT)
     d = np.zeros((C, C, pmax), dtype=INT)
     w = np.ones((C, C, pmax), dtype=WEIGHT)
+    m = np.zeros((C, C, pmax), dtype=INT)
     s.ravel()[flat] = src[order] % K
     d.ravel()[flat] = dst[order] % K
     w.ravel()[flat] = wgt[order]
-    m = (np.arange(pmax) < counts[:, None]).astype(INT).reshape(C, C, pmax)
+    m.ravel()[flat] = 1  # one E-sized scatter, not two passes over C*C*pmax
     return PairwiseLayout(pair_max=pmax, pb_src_local=s, pb_dst_local=d,
                           pb_valid=m, pb_weight=w)
 

@@ -47,6 +47,12 @@ class VertexProgram:
     update: Callable  # (state [K], aux {name: [K]}) -> sent values [K]
     edge_value: Callable | None  # (vals_at_src, weights) -> contribution
     apply: Callable  # (state, incoming, aux) -> new state
+    # declarative twin of ``edge_value`` for the fused kernels: "weight"
+    # means the canonical semiring transform over the layout's edge weights
+    # (multiply for add, saturating add for min), "unit" the same with w=1
+    # (BFS's hop count).  None + an edge_value means the transform is not
+    # kernel-expressible and a push_fn hook falls back to the staged path.
+    edge_semiring: str | None = None
     fixed_iters: int | None = None
     max_iters: int = 10_000
 
@@ -114,14 +120,14 @@ def make_program(name: str, **params) -> VertexProgram:
 
 
 def run_parallel(graph: Graph, algorithm: str, num_pes: int = 1,
-                 strategy: str = "sortdest", segment_fn=None,
+                 strategy: str = "sortdest", segment_fn=None, push_fn=None,
                  partitioner: str = "contiguous", **params):
     """Partition + engine + run, in one call (tests and examples)."""
     from repro.core.engine import Engine
     from repro.core.graph import partition
 
     eng = Engine(partition(graph, num_pes, partitioner=partitioner),
-                 strategy=strategy, segment_fn=segment_fn)
+                 strategy=strategy, segment_fn=segment_fn, push_fn=push_fn)
     return eng.run(algorithm, **params)
 
 
@@ -172,6 +178,7 @@ def _make_pagerank_weighted(alpha: float = 0.85, iters: int = 20) -> VertexProgr
         init=lambda pg: np.zeros((pg.num_chunks, pg.chunk_size), np.float32),
         update=lambda a, aux: alpha * a / aux["out_weight"],
         edge_value=lambda v, w: v * w,
+        edge_semiring="weight",
         apply=lambda a, inc, aux: (1.0 - alpha + inc) * _f32(aux["vertex_valid"]),
         fixed_iters=iters,
     )
@@ -233,6 +240,7 @@ def _make_sssp(source: int = 0, max_iters: int = 10_000) -> VertexProgram:
         init=lambda pg: _index_state(pg, np.inf, np.float32, source),
         update=lambda d, aux: d,
         edge_value=lambda v, w: v + w,
+        edge_semiring="weight",
         apply=lambda d, inc, aux: jnp.minimum(d, inc),
         fixed_iters=None,
         max_iters=max_iters,
@@ -273,7 +281,8 @@ def _make_bfs(source: int = 0, max_iters: int = 10_000) -> VertexProgram:
         combiner=strat.MIN,
         init=lambda pg: _index_state(pg, INT_SENTINEL, np.int32, source),
         update=lambda d, aux: d,
-        edge_value=_bfs_hop,
+        edge_value=_bfs_hop,  # +1 per hop, weights ignored
+        edge_semiring="unit",
         apply=lambda d, inc, aux: jnp.minimum(d, inc),
         fixed_iters=None,
         max_iters=max_iters,

@@ -90,14 +90,35 @@ def _segment(combiner, segment_fn, data, seg_ids, num_segments):
 
 def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
                    combiner, num_chunks, chunk_size, segment_fn=None,
-                   edge_value=None):
+                   edge_value=None, push_fn=None, band=None,
+                   edge_semiring=None):
     """Local per-destination combine into a dense [C*K] buffer.
 
     This is the aggregation loop of Listing 2's ``iterate()``; with the
     sort-destination edge layout the same call performs the paper's
     "combine updates to one external vertex before sending" locally (adjacent
     segment entries), which is what makes the compact per-chunk send legal.
+
+    A ``push_fn`` hook (``ops.make_push_fn``) takes over the WHOLE loop --
+    gather, semiring edge transform, segment combine -- as one fused kernel
+    launch fed by the layout's ``band`` metadata.  The transform is chosen
+    by the program's *declared* ``edge_semiring``: ``None`` (no
+    ``edge_value``) sends the vertex value untransformed, ``"weight"``
+    applies the canonical semiring transform over the layout weights
+    (multiply for add, saturating add for min), ``"unit"`` the same with
+    w=1 (BFS hop counts ignore edge weights).  A program whose
+    ``edge_value`` is not declared kernel-expressible falls back to the
+    staged path below -- never a silently different transform.
+    Without a hook the pipeline runs as three jitted stages, optionally
+    routing the segment half through ``segment_fn``.
     """
+    if push_fn is not None and (edge_value is None or edge_semiring):
+        unit = edge_semiring == "unit" and edge_value is not None
+        weight = edge_weight if edge_semiring == "weight" \
+            and edge_value is not None else None
+        return push_fn(vals, src_local, dst_global, edge_valid, weight,
+                       num_chunks * chunk_size, combine=combiner.name,
+                       band=band, unit=unit)
     contrib = _edge_transform(vals[src_local], edge_weight, edge_value)
     contrib = combiner.mask(contrib, edge_valid)
     return _segment(combiner, segment_fn, contrib, dst_global,
@@ -110,7 +131,7 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
 
 
 def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-              edge_value=None):
+              edge_value=None, push_fn=None, edge_semiring=None):
     """Paper's *reduction* variant: dense |V| buffer + all-reduce.
 
     Every chare contributes a buffer of size |V|; the reduction tree combines
@@ -120,7 +141,8 @@ def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None
     dense = _dense_contrib(vals, pg_arrays["src_local"], pg_arrays["dst_global"],
                            pg_arrays["edge_valid"], pg_arrays["edge_weight"],
                            combiner, num_chunks, chunk_size, segment_fn,
-                           edge_value)
+                           edge_value, push_fn, pg_arrays["band"],
+                           edge_semiring)
     if combiner.name == "add":
         full = jax.lax.psum(dense, AXIS)
     else:
@@ -130,7 +152,7 @@ def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None
 
 
 def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-             edge_value=None):
+             edge_value=None, push_fn=None, edge_semiring=None):
     """Paper's *sort destination* variant (its best performer).
 
     Edges are stored sorted by destination chunk; contributions to one
@@ -145,7 +167,8 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
                            pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
                            pg_arrays["sd_edge_weight"], combiner, num_chunks,
-                           chunk_size, segment_fn, edge_value)
+                           chunk_size, segment_fn, edge_value, push_fn,
+                           pg_arrays["sd_band"], edge_semiring)
     if combiner.name == "add":
         return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
     blocks = dense.reshape(num_chunks, chunk_size)
@@ -155,7 +178,10 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
 
 
 def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-          edge_value=None):
+          edge_value=None, push_fn=None, edge_semiring=None):
+    # push_fn is part of the shared strategy signature but does not apply
+    # here: the receive side combines *already-gathered* payloads, so the
+    # Pallas route for this variant is the scatter-half segment_fn.
     """Paper's *basic* variant: point-to-point (dst, value) pair messages.
 
     No local combining: one (dst_local, value) pair per edge is bucketed by
@@ -179,7 +205,7 @@ def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
 
 
 def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-          edge_value=None):
+          edge_value=None, push_fn=None, edge_semiring=None):
     """Paper's *pairs* variant: one buffer per ordered chare pair, no global
     synchronization.  TPU-native form: a ring of ``ppermute`` hops where each
     shard forwards a partially-combined block and folds in its own
@@ -191,7 +217,8 @@ def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
                            pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
                            pg_arrays["sd_edge_weight"], combiner, num_chunks,
-                           chunk_size, segment_fn, edge_value)
+                           chunk_size, segment_fn, edge_value, push_fn,
+                           pg_arrays["sd_band"], edge_semiring)
     blocks = dense.reshape(num_chunks, chunk_size)
     me = jax.lax.axis_index(AXIS)
     perm = [(k, (k + 1) % num_chunks) for k in range(num_chunks)]

@@ -1,0 +1,105 @@
+"""Kernel tile geometry + band metadata, shared by the layout builder and the
+Pallas kernels.
+
+This module is deliberately numpy-only: ``repro.core.graph`` computes the
+per-edge-block band metadata at partition time (alongside the radix layout
+build) without importing JAX, while the kernels import the same block
+constants so the two sides can never disagree on tile geometry.
+
+Band metadata (DESIGN.md section 8): for every BLOCK_E-sized edge block of a
+``[C, Emax]`` layout we record the half-open-ish inclusive range of source
+vertex blocks and destination segment blocks its *valid* edges touch:
+
+    band[c] = [src_lo, src_hi, seg_lo, seg_hi] per edge block   (int32, [4, NB])
+
+Because the layouts are sorted by (segment block, source block) the bands are
+narrow -- a few blocks instead of V/BLOCK_V (gather) or S/BLOCK_S (scatter) --
+and the fused kernel's two ``fori_loop``s visit only the in-band tiles.
+Empty edge blocks (all padding) get ``lo=0, hi=-1`` so both loops run zero
+iterations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BLOCK_E = 256  # edges per tile
+BLOCK_V = 256  # source-vertex chunk
+BLOCK_S = 256  # output-segment chunk
+
+
+def num_edge_blocks(emax: int) -> int:
+    """Edge blocks per layout row once padded to the BLOCK_E grid."""
+    return max(-(-emax // BLOCK_E), 1)
+
+
+def edge_bands(src: np.ndarray, dst: np.ndarray, valid: np.ndarray
+               ) -> np.ndarray:
+    """-> ``[C, 4, NB]`` int32 band metadata for a ``[C, Emax]`` edge layout.
+
+    ``src`` holds local source indices (gather side, blocks of BLOCK_V),
+    ``dst`` padded destination ids (scatter side, blocks of BLOCK_S), and
+    ``valid`` the 0/1 padding mask.  Rows of the middle axis are
+    (src_lo, src_hi, seg_lo, seg_hi), inclusive; blocks with no valid edges
+    get (0, -1, 0, -1).
+    """
+    C, emax = src.shape
+    nb = num_edge_blocks(emax)
+    pad = nb * BLOCK_E - emax
+    if pad:
+        widen = lambda a: np.pad(a, ((0, 0), (0, pad)))
+        src, dst, valid = widen(src), widen(dst), widen(valid)
+    shape = (C, nb, BLOCK_E)
+    big = np.int32(1) << 30
+    sb = (src.astype(np.int32) // BLOCK_V).reshape(shape)
+    db = (dst.astype(np.int32) // BLOCK_S).reshape(shape)
+    live = valid.reshape(shape) != 0
+    lo = lambda blk: np.where(live, blk, big).min(axis=2)
+    hi = lambda blk: np.where(live, blk, np.int32(-1)).max(axis=2)
+    band = np.stack([lo(sb), hi(sb), lo(db), hi(db)], axis=1)
+    empty = ~live.any(axis=2)  # lo stayed big; clamp to the empty (0, -1)
+    band[:, 0][empty] = 0
+    band[:, 2][empty] = 0
+    return band.astype(np.int32)
+
+
+def edge_bands_grouped(src_blk: np.ndarray, seg_blk: np.ndarray,
+                       per_chunk_e: np.ndarray, emax: int) -> np.ndarray:
+    """``edge_bands`` from owner-grouped *flat* arrays -- the partition-time
+    fast path (no ``[C, Emax]`` temporaries; one ``reduceat`` per bound).
+
+    ``src_blk``/``seg_blk`` are the per-edge gather/scatter tile ids in the
+    final layout order (owners grouped, ``per_chunk_e[c]`` edges per chare);
+    ``emax`` is the padded row width the rectangle layout will use.  Returns
+    the same ``[C, 4, NB]`` table as ``edge_bands`` on the packed rectangle.
+    """
+    C = len(per_chunk_e)
+    nb = num_edge_blocks(emax)
+    band = np.zeros((C, 4, nb), dtype=np.int32)
+    band[:, 1] = -1
+    band[:, 3] = -1
+    nblk = -(-per_chunk_e // BLOCK_E)  # blocks with >= 1 valid edge per row
+    total = int(nblk.sum())
+    if total == 0:
+        return band
+    starts = np.zeros(C, dtype=np.int64)
+    np.cumsum(per_chunk_e[:-1], out=starts[1:])
+    rows = np.repeat(np.arange(C, dtype=np.int64), nblk)
+    bstarts = np.zeros(C, dtype=np.int64)
+    np.cumsum(nblk[:-1], out=bstarts[1:])
+    blkid = np.arange(total, dtype=np.int64) - bstarts[rows]
+    # flat cut points; each reduceat segment ends at the next cut (the next
+    # row's first cut == this row's edge count, so no padding mask needed)
+    bounds = starts[rows] + blkid * BLOCK_E
+    band[rows, 0, blkid] = np.minimum.reduceat(src_blk, bounds)
+    band[rows, 1, blkid] = np.maximum.reduceat(src_blk, bounds)
+    band[rows, 2, blkid] = np.minimum.reduceat(seg_blk, bounds)
+    band[rows, 3, blkid] = np.maximum.reduceat(seg_blk, bounds)
+    return band
+
+
+def band_tiles(band: np.ndarray) -> int:
+    """Total in-band tiles (gather + scatter) a fused sweep would visit."""
+    width = lambda lo, hi: np.maximum(hi - lo + 1, 0)
+    return int(width(band[..., 0, :], band[..., 1, :]).sum()
+               + width(band[..., 2, :], band[..., 3, :]).sum())

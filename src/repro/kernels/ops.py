@@ -1,5 +1,15 @@
 """Jitted wrappers for the push kernels: padding, dispatch, engine hooks.
 
+Two kernel paths serve the paper's per-chare hot loop:
+
+  * ``fused``  (default) -- one band-pruned ``pallas_call`` per superstep
+    (``repro.kernels.push_fused``): gather, edge-value transform, and segment
+    combine in one VMEM-resident pass, tile work pruned to the layout's
+    (source block, segment block) bands.
+  * ``staged`` -- the legacy two-kernel dense grid (``push_sum``/``push_min``)
+    with the ``[E]`` intermediate between the halves; kept as the reference
+    for the fused-vs-staged comparisons in ``benchmarks.kernelbench``.
+
 On this CPU container kernels always run with ``interpret=True`` (the Pallas
 interpreter executes the kernel body faithfully); on TPU pass
 ``interpret=False`` to compile through Mosaic.
@@ -12,11 +22,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import push_fused as fused_mod
 from repro.kernels import push_min, push_sum
-
-BLOCK_E = push_sum.BLOCK_E
-BLOCK_V = push_sum.BLOCK_V
-BLOCK_S = push_sum.BLOCK_S
+from repro.kernels.blocks import BLOCK_E, BLOCK_S, BLOCK_V
 
 _ON_TPU = jax.default_backend() == "tpu"
 
@@ -52,9 +60,44 @@ def _min_restore_identity(out):
     return out
 
 
-@partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
+def _bands_on_device(src, dst, valid, num_blocks):
+    """jnp twin of ``blocks.edge_bands`` for standalone (layout-less) calls:
+    per-edge-block (src_lo, src_hi, seg_lo, seg_hi) over valid edges only."""
+    eb = jnp.arange(src.shape[0], dtype=jnp.int32) // BLOCK_E
+    live = valid != 0
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+    def lo(blk):
+        x = jax.ops.segment_min(jnp.where(live, blk, big), eb,
+                                num_segments=num_blocks)
+        return jnp.where(x == big, 0, x)  # empty block -> (0, -1)
+
+    def hi(blk):
+        return jax.ops.segment_max(jnp.where(live, blk, -1), eb,
+                                   num_segments=num_blocks)
+
+    sb, db = src // BLOCK_V, dst // BLOCK_S
+    return jnp.stack([lo(sb), hi(sb), lo(db), hi(db)]).astype(jnp.int32)
+
+
+def _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p, combine,
+                 interpret):
+    """Legacy two-kernel dense-grid path (3 jitted stages, [E] intermediate)."""
+    if combine == "add":
+        c = push_sum.gather_sum(src_p, valid_p, vals_p, interpret=interpret)
+        if weight is not None:
+            c = c * _pad_to(weight, BLOCK_E, 1).astype(c.dtype)
+        return push_sum.scatter_sum(dst_p, c, nseg_p, interpret=interpret)
+    c = push_min.gather_min(src_p, valid_p, vals_p, interpret=interpret)
+    if weight is not None:
+        c = _sat_add(c, _pad_to(weight, BLOCK_E, 0))
+    return push_min.scatter_min(dst_p, c, nseg_p, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "combine", "interpret",
+                                   "fused", "unit_weight"))
 def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
-         interpret=not _ON_TPU):
+         band=None, interpret=not _ON_TPU, fused=True, unit_weight=False):
     """out[s] = combine_{e: dst[e]==s, valid[e]==1} edge_value(vals[src[e]]).
 
     The paper's per-chare hot loop; arbitrary (unpadded) shapes accepted.
@@ -63,6 +106,13 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
     saturating ``c + w`` for min -- the same ``edge_value`` hook the dense
     strategies expose (see repro.core.programs).  Float min treats values
     at/above the int32 sentinel as unreached and returns them as +inf.
+
+    ``fused`` selects the one-launch band-pruned kernel (default); ``band``
+    is the precomputed ``[4, E/BLOCK_E]`` metadata from the partition-time
+    layout build (``blocks.edge_bands``), derived on the fly when absent.
+    ``unit_weight`` applies the semiring transform with a constant 1 and no
+    streamed weight operand (BFS hop counts).  ``fused=False`` runs the
+    legacy staged pair.
     """
     identity = 0 if combine == "add" else push_min.SENTINEL
     vals_p = _pad_to(vals, BLOCK_V, identity)
@@ -70,34 +120,45 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
     dst_p = _pad_to(dst, BLOCK_E, 0)
     valid_p = _pad_to(valid, BLOCK_E, 0)
     nseg_p = num_segments + ((-num_segments) % BLOCK_S)
-    if combine == "add":
-        c = push_sum.gather_sum(src_p, valid_p, vals_p, interpret=interpret)
-        if weight is not None:
-            c = c * _pad_to(weight, BLOCK_E, 1).astype(c.dtype)
-        out = push_sum.scatter_sum(dst_p, c, nseg_p, interpret=interpret)
-        return out[:num_segments].astype(vals.dtype)
-    if jnp.issubdtype(vals_p.dtype, jnp.floating):
+    if combine == "min" and jnp.issubdtype(vals_p.dtype, jnp.floating):
         # inf -> sentinel so the kernel's int-sentinel fills and masks compare
         # consistently; restored to inf on the way out
         vals_p = jnp.minimum(vals_p, push_min.SENTINEL)
-    c = push_min.gather_min(src_p, valid_p, vals_p, interpret=interpret)
-    if weight is not None:
-        c = _sat_add(c, _pad_to(weight, BLOCK_E, 0))
-    out = push_min.scatter_min(dst_p, c, nseg_p, interpret=interpret)
-    return _min_restore_identity(out[:num_segments])
+    if fused:
+        if band is None:
+            band = _bands_on_device(src_p, dst_p, valid_p,
+                                    src_p.shape[0] // BLOCK_E)
+        w_p = None if weight is None else _pad_to(
+            weight, BLOCK_E, 1 if combine == "add" else 0)
+        out = fused_mod.fused_push(band, src_p, dst_p, valid_p, w_p, vals_p,
+                                   nseg_p, combine=combine,
+                                   unit_weight=unit_weight,
+                                   interpret=interpret)
+    else:
+        if unit_weight and weight is None and combine == "min":
+            weight = jnp.ones_like(valid)  # staged path streams the ones
+        out = _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p,
+                           combine, interpret)
+    out = out[:num_segments]
+    if combine == "add":
+        return out.astype(vals.dtype)
+    return _min_restore_identity(out)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "combine", "interpret"))
 def segment_reduce(data, seg_ids, num_segments, combine="add",
                    interpret=not _ON_TPU):
-    """Scatter half only (data already gathered): engine's segment hook."""
+    """Scatter half only (data already gathered): engine's segment hook.
+
+    Integer add data accumulates in its own integer dtype -- the seed cast
+    everything to float32, which silently rounds int sums above 2^24.
+    """
     identity = 0 if combine == "add" else push_min.SENTINEL
     data_p = _pad_to(data, BLOCK_E, identity)
     seg_p = _pad_to(seg_ids, BLOCK_E, 0)
     nseg_p = num_segments + ((-num_segments) % BLOCK_S)
     if combine == "add":
-        out = push_sum.scatter_sum(seg_p, data_p.astype(jnp.float32), nseg_p,
-                                   interpret=interpret)
+        out = push_sum.scatter_sum(seg_p, data_p, nseg_p, interpret=interpret)
         return out[:num_segments].astype(data.dtype)
     if jnp.issubdtype(data_p.dtype, jnp.floating):
         data_p = jnp.minimum(data_p, push_min.SENTINEL)  # +inf -> sentinel
@@ -123,5 +184,33 @@ def make_segment_fn(interpret=not _ON_TPU, combine=None):
                        else "min")
         return segment_reduce(data, seg_ids, num_segments, combine=combine,
                               interpret=interpret)
+
+    return fn
+
+
+def make_push_fn(interpret=not _ON_TPU, fused=True):
+    """Adapter for ``Engine(push_fn=...)``: the whole per-chare hot loop --
+    gather, edge-value transform, segment combine -- as one fused Pallas
+    launch, fed by the layout's partition-time band metadata.
+
+    Contract (see ``strategies._dense_contrib``): strategies call
+
+        push_fn(vals, src_local, dst, valid, weight, num_segments,
+                combine=..., band=...)
+
+    with ``weight=None`` when the program has no edge transform.  The hook
+    implements the canonical semiring transforms (weight multiply for add,
+    saturating add for min); which weights go in is decided by the
+    program's declared ``edge_semiring`` ("weight" / "unit" / None), and a
+    program whose ``edge_value`` is not declared kernel-expressible runs
+    the staged path instead -- the hook never substitutes a different
+    transform.
+    """
+
+    def fn(vals, src, dst, valid, weight, num_segments, combine, band=None,
+           unit=False):
+        return push(vals, src, dst, valid, num_segments, combine=combine,
+                    weight=weight, band=band, interpret=interpret,
+                    fused=fused, unit_weight=unit)
 
     return fn

@@ -1,0 +1,193 @@
+"""Fused, band-pruned Pallas push kernels: one pass per superstep.
+
+The staged path (``push_sum``/``push_min``) runs the paper's hot loop as two
+dense-grid kernels with an ``[E]`` intermediate making a full HBM round trip
+between them, and visits every (edge-block x vertex-block) and
+(segment-block x edge-block) tile -- O(E*V/B^2) tile work for O(E) useful
+work.  These kernels fuse the whole semiring push
+
+    out[s] = combine_{e: dst[e]==s, valid[e]} edge_value(vals[src[e]], w[e])
+
+into ONE ``pallas_call``: per edge block the gather one-hot matmul, the
+edge-value transform (weight multiply for add, saturating add for min), and
+the segment combine all happen in VMEM; the per-edge contribution never
+touches HBM.
+
+Band pruning (DESIGN.md section 8): the grid is 1-D over edge blocks; the
+``vals`` and ``out`` vectors stay resident in VMEM across the whole sweep
+(their BlockSpecs map every grid step to block 0).  Scalar-prefetched band
+metadata (``repro.kernels.blocks.edge_bands``) gives each edge block the
+inclusive range of source vertex blocks and destination segment blocks its
+valid edges touch, and two ``fori_loop``s visit only those tiles.  Because
+the layouts are sorted by (destination segment block, source vertex block)
+the bands are a few blocks wide, so tile work drops from
+O((E/BE)*(V/BV) + (S/BS)*(E/BE)) to O(sum of band widths) -- measured ~11x
+fewer tiles at 1 chare (~32x at 8) on the scale-13 RMAT stand-in (see
+``benchmarks.kernelbench.layout_cost_model``).
+
+On this CPU container the kernels execute through the Pallas interpreter
+(``interpret=True``); on TPU the same code compiles through Mosaic with the
+band bounds living in SMEM via ``PrefetchScalarGridSpec``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.blocks import BLOCK_E, BLOCK_S, BLOCK_V
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _fused_push_add_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
+                           vals_ref, out_ref, *, weight_mode):
+    """One edge block: gather (band-pruned) -> weight multiply -> scatter.
+
+    ``weight_mode``: "none" skips the transform, "array" multiplies by the
+    streamed per-edge weights ("unit" never reaches the add kernel --
+    multiplying by 1 is the identity, so the wrapper folds it to "none").
+    """
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[...]
+    valid = (valid_ref[...] != 0)
+
+    def gather(b, c):
+        base = b * BLOCK_V
+        hit = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
+        hit = hit & valid[:, None]
+        vblk = vals_ref[pl.ds(base, BLOCK_V)]
+        return c + jnp.dot(hit.astype(vblk.dtype), vblk,
+                           preferred_element_type=c.dtype)
+
+    c = jax.lax.fori_loop(
+        band_ref[0, e], band_ref[1, e] + 1, gather,
+        jnp.zeros((BLOCK_E,), out_ref.dtype))
+    if weight_mode == "array":
+        c = c * w_ref[...].astype(c.dtype)
+    dst = dst_ref[...]
+
+    def scatter(b, _):
+        base = b * BLOCK_S
+        hit = (dst[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_S)[None, :])
+        hit = hit & valid[:, None]
+        out_ref[pl.ds(base, BLOCK_S)] += jnp.dot(
+            hit.astype(c.dtype).T, c, preferred_element_type=out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(band_ref[2, e], band_ref[3, e] + 1, scatter, 0)
+
+
+def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
+                           vals_ref, out_ref, *, weight_mode):
+    """Min monoid: VPU mask-and-reduce in place of the MXU one-hot matmul.
+
+    ``weight_mode`` "array" applies the min-plus semiring transform: a
+    saturating ``c + w`` that never wraps past the int32 sentinel (float
+    values ride on plain addition -- anything at/above the sentinel is
+    "unreached" and the caller maps it back to +inf).  "unit" is the same
+    with a compile-time constant 1 (BFS hop counts): no per-edge weight
+    operand is streamed from HBM at all.
+    """
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+
+    src = src_ref[...]
+    valid = (valid_ref[...] != 0)
+
+    def gather(b, c):
+        base = b * BLOCK_V
+        hit = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
+        hit = hit & valid[:, None]
+        vblk = vals_ref[pl.ds(base, BLOCK_V)]
+        cand = jnp.where(hit, vblk[None, :], jnp.asarray(SENTINEL, c.dtype))
+        return jnp.minimum(c, cand.min(axis=1))
+
+    c = jax.lax.fori_loop(
+        band_ref[0, e], band_ref[1, e] + 1, gather,
+        jnp.full((BLOCK_E,), SENTINEL, out_ref.dtype))
+    if weight_mode != "none":
+        w = jnp.ones((BLOCK_E,), c.dtype) if weight_mode == "unit" \
+            else w_ref[...].astype(c.dtype)
+        if jnp.issubdtype(out_ref.dtype, jnp.floating):
+            c = c + w
+        else:
+            c = c + jnp.minimum(w, SENTINEL - c)  # saturate, never wrap
+    dst = dst_ref[...]
+
+    def scatter(b, _):
+        base = b * BLOCK_S
+        hit = (dst[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_S)[None, :])
+        hit = hit & valid[:, None]
+        cand = jnp.where(hit, c[:, None], jnp.asarray(SENTINEL, c.dtype))
+        cur = out_ref[pl.ds(base, BLOCK_S)]
+        out_ref[pl.ds(base, BLOCK_S)] = jnp.minimum(cur, cand.min(axis=0))
+        return 0
+
+    jax.lax.fori_loop(band_ref[2, e], band_ref[3, e] + 1, scatter, 0)
+
+
+def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
+               combine="add", unit_weight=False, interpret=True):
+    """One-launch fused push over pre-padded inputs.
+
+    Shapes: edges padded to BLOCK_E (``band`` is [4, E/BLOCK_E] int32 from
+    ``blocks.edge_bands``), ``vals`` padded to BLOCK_V, ``num_segments`` a
+    BLOCK_S multiple.  ``weight=None`` skips the edge-value transform;
+    ``unit_weight`` applies it with a compile-time constant 1 instead of a
+    streamed operand (the kernel is specialized, not masked).  The
+    accumulator/output dtype is the ``vals`` dtype for min and float32 (or
+    the input float dtype) for add.
+    """
+    E, V = src.shape[0], vals.shape[0]
+    if unit_weight and weight is not None:
+        raise ValueError("unit_weight replaces the weight operand")
+    weight_mode = "array" if weight is not None else \
+        ("unit" if unit_weight else "none")
+    if combine == "add":
+        body = _fused_push_add_kernel
+        if weight_mode == "unit":
+            weight_mode = "none"  # multiplying by 1 is the identity
+        out_dtype = vals.dtype if jnp.issubdtype(vals.dtype, jnp.integer) \
+            else jnp.promote_types(vals.dtype, jnp.float32)
+    else:
+        body = _fused_push_min_kernel
+        out_dtype = vals.dtype
+    kernel = functools.partial(body, weight_mode=weight_mode)
+    edge_spec = lambda: pl.BlockSpec((BLOCK_E,), lambda e, band: (e,))
+    in_specs = [edge_spec(), edge_spec(), edge_spec()]
+    operands = [src, dst, valid]
+    if weight_mode == "array":
+        in_specs.append(edge_spec())
+        operands.append(weight)
+    else:
+        # no per-edge weight operand: the transform is the identity or a
+        # compile-time constant, so nothing is streamed for it
+        w_kernel = kernel
+        kernel = lambda band, s, d, v, vals_ref, out_ref: \
+            w_kernel(band, s, d, v, None, vals_ref, out_ref)
+    in_specs.append(pl.BlockSpec((V,), lambda e, band: (0,)))  # resident
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the band table rides in SMEM
+        grid=(E // BLOCK_E,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((num_segments,), lambda e, band: (0,)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments,), out_dtype),
+        interpret=interpret,
+    )(band, *operands, vals)

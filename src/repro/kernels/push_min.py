@@ -14,9 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_E = 256
-BLOCK_V = 256
-BLOCK_S = 256
+from repro.kernels.blocks import BLOCK_E, BLOCK_S, BLOCK_V
 
 SENTINEL = jnp.iinfo(jnp.int32).max
 

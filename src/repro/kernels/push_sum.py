@@ -21,15 +21,11 @@ Pallas guarantees stays resident in VMEM (sequential TPU grid).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_E = 256  # edges per tile
-BLOCK_V = 256  # source-vertex chunk
-BLOCK_S = 256  # output-segment chunk
+from repro.kernels.blocks import BLOCK_E, BLOCK_S, BLOCK_V
 
 
 def _gather_sum_kernel(src_ref, valid_ref, vals_ref, c_ref):
@@ -65,7 +61,10 @@ def _scatter_sum_kernel(dst_ref, c_ref, out_ref):
 def gather_sum(src, valid, vals, *, interpret=True):
     """c[e] = vals[src[e]] * valid[e]; shapes padded to the block grid."""
     E, V = src.shape[0], vals.shape[0]
-    acc = jnp.float32 if vals.dtype != jnp.float64 else vals.dtype
+    # ints accumulate as ints (casting through f32 rounds sums above 2^24);
+    # floats widen to at least f32 for the MXU accumulator
+    acc = (vals.dtype if jnp.issubdtype(vals.dtype, jnp.integer)
+           else jnp.promote_types(vals.dtype, jnp.float32))
     return pl.pallas_call(
         _gather_sum_kernel,
         grid=(E // BLOCK_E, V // BLOCK_V),

@@ -42,12 +42,24 @@ def test_partition_preserves_edges_and_weights():
 
 
 def test_sortdest_layout_is_dest_sorted():
-    g = G.rmat(5, 150, seed=6)
+    """sd layout order: destination segment block outermost, then source
+    vertex block -- dest-sorted at kernel-tile granularity (the fused-kernel
+    band invariant, DESIGN.md section 8)."""
+    from repro.kernels.blocks import BLOCK_S, BLOCK_V
+
+    # scale past one 256-tile so the block-granular ordering is non-trivial
+    g = G.rmat(10, 4000, seed=6)
     pg = G.partition(g, 2)
+    nsb = -(-pg.chunk_size // BLOCK_V)
     for c in range(pg.num_chunks):
         sel = pg.sd_edge_valid[c] == 1
-        d = pg.sd_dst_global[c][sel]
-        assert np.all(np.diff(d) >= 0), "edges must be sorted by destination"
+        d = pg.sd_dst_global[c][sel].astype(np.int64)
+        s = pg.sd_src_local[c][sel].astype(np.int64)
+        key = (d // BLOCK_S) * nsb + s // BLOCK_V
+        assert np.all(np.diff(key) >= 0), \
+            "edges must be sorted by (dest block, src block)"
+        assert np.all(np.diff(d // BLOCK_S) >= 0), \
+            "dest segment blocks must be nondecreasing"
 
 
 def test_out_weight_sums_outgoing():

@@ -60,6 +60,26 @@ for pname in ("contiguous", "edge_balanced", "striped", "degree_sorted"):
     part_ok &= bool(np.array_equal(got_l, oracle))
 results["partitioner_ok"] = bool(part_ok)
 
+# ---- 1c) fused push hook at real multi-PE: band tables shard per chare,
+# the pallas sweep runs inside shard_map, and results must still match the
+# serial references (bit-exact for min monoids)
+from repro.kernels import ops as K
+hook_ok = True
+hook_err = 0.0
+for strat in ("reduction", "sortdest", "pairs"):
+    for pes in (2, 8):
+        got_p = run_parallel(g, "pagerank", num_pes=pes, strategy=strat,
+                             push_fn=K.make_push_fn())[0]
+        hook_err = max(hook_err, float(np.max(np.abs(got_p - ref))))
+        got_s, _ = run_parallel(gw, "sssp", num_pes=pes, strategy=strat,
+                                push_fn=K.make_push_fn(), source=7)
+        hook_ok &= bool(np.array_equal(got_s, sssp_ref))
+        got_b, _ = run_parallel(g, "bfs", num_pes=pes, strategy=strat,
+                                push_fn=K.make_push_fn(), source=7)
+        hook_ok &= bool(np.array_equal(got_b, bfs_ref))
+results["push_hook_ok"] = bool(hook_ok)
+results["push_hook_max_err"] = hook_err
+
 # ---- 2) sharded MoE == dense reference ------------------------------------
 from repro.models.config import ModelConfig
 from repro.models import moe as MOE
@@ -169,6 +189,8 @@ def test_multidevice_suite():
     assert res["pagerank_max_err"] < 1e-3
     assert res["labelprop_ok"]
     assert res["partitioner_ok"]
+    assert res["push_hook_ok"]
+    assert res["push_hook_max_err"] < 1e-3
     assert res["moe_err"] == 0.0
     assert res["ring_attn_err"] < 2e-6
     assert res["train_loss_delta"] < 1e-3
