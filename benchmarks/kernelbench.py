@@ -26,8 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
-from repro.kernels.blocks import (BLOCK_E, BLOCK_S, BLOCK_V, band_tiles,
-                                  num_edge_blocks)
+from repro.kernels.blocks import (BLOCK_E, BLOCK_V, band_tiles, choose_push,
+                                  dense_grid, num_edge_blocks)
 
 # launch/stage counts per push: staged = gather kernel + weight stage +
 # scatter kernel; fused = one pallas_call
@@ -78,8 +78,7 @@ def kernel_cost_model(E=1 << 16, V=1 << 14, S=None, band=None, chares=1,
     if S is None:
         S = V
     ne = num_edge_blocks(E)
-    nv, ns = -(-V // BLOCK_V), -(-S // BLOCK_S)
-    dense_tiles = chares * (ne * nv + ns * ne)
+    dense_tiles = sum(dense_grid(E, V, S, chares))
     fused_tiles = band_tiles(np.asarray(band)) if band is not None \
         else dense_tiles
     tile_flops = 2 * BLOCK_E * BLOCK_V  # == 2*BE*BS; square blocks
@@ -110,11 +109,16 @@ def kernel_cost_model(E=1 << 16, V=1 << 14, S=None, band=None, chares=1,
 
 def layout_cost_model(pg, layout="sd"):
     """``kernel_cost_model`` fed by a real partition's band metadata: one
-    fused sweep per chare per superstep, bands summed over all chares."""
+    fused sweep per chare per superstep, bands summed over all chares.
+    ``dispatch`` reports what ``Engine(push_fn='auto')`` would pick for this
+    layout (the adaptive staged-vs-fused rule, ``blocks.choose_push``)."""
     band = pg.sd_band if layout == "sd" else pg.band
-    return kernel_cost_model(
-        E=pg.sd_src_local.shape[1], V=pg.chunk_size,
-        S=pg.num_chunks * pg.chunk_size, band=band, chares=pg.num_chunks)
+    E, V, S = (pg.edge_valid.shape[1], pg.chunk_size,
+               pg.num_chunks * pg.chunk_size)
+    cm = kernel_cost_model(E=E, V=V, S=S, band=band, chares=pg.num_chunks)
+    choice, occ = choose_push(band, E, V, S)
+    cm["dispatch"] = {"choice": choice, "layout": layout, **occ}
+    return cm
 
 
 def validate(E=4096, V=2048, seed=1, fused=True):

@@ -12,6 +12,8 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   imbalance.* per-chare load skew + padding waste per partitioner policy
   wire.*     analytic per-device wire bytes on the production mesh
   kernel.*   push-kernel validation + timing + staged/fused TPU cost model
+  dispatch.* what push_fn='auto' chose per layout (fused on the power-law
+             stand-in, staged on a near-uniform contrast graph)
   roofline.* dry-run roofline aggregates (reads experiments/dryrun/)
   cost.*     the COST verdict per algorithm
 
@@ -118,6 +120,18 @@ def main():
         emit(f"kernel.push.tpu_model_{path}",
              f"{max(cm[path]['mxu_s'], cm[path]['hbm_s']):.2e}",
              f"bound={cm[path]['bound']}")
+
+    # ---- adaptive dispatch (what push_fn='auto' chooses per layout) -------
+    from repro.core.graph import erdos_renyi
+
+    uniform = erdos_renyi(1 << scale, 2 * (1 << scale), seed=1)
+    cmu = kernelbench.layout_cost_model(partition(uniform, 8))
+    adaptive = {"rmat_standin": cm["dispatch"], "near_uniform": cmu["dispatch"]}
+    for gname, d in adaptive.items():
+        emit(f"dispatch.{gname}", d["choice"],
+             f"max_occ={d['max_occupancy']:.3f} "
+             f"tiles_fused={d['tiles_fused']} tiles_staged={d['tiles_staged']}")
+    cost_json["adaptive_dispatch"] = adaptive
 
     kernels_json = {
         "schema": 1,

@@ -18,7 +18,7 @@ from repro.core.partitioners import (PartitionPlan, PartitionerSpec,
                                      get_partitioner, make_plan,
                                      partition_stats, partitioner_names,
                                      policy_label, register_partitioner)
-from repro.core.engine import Engine, make_pe_mesh
+from repro.core.engine import Engine, ReplanPolicy, make_pe_mesh
 from repro.core.programs import (VertexProgram, ProgramSpec, make_program,
                                  get_spec, registered_names, run_parallel,
                                  sssp_serial, bfs_serial,

@@ -40,6 +40,10 @@ class CostReport:
     # {(partitioner, strategy, pes): seconds}
     parallel_s: dict
     cost: dict  # {(partitioner, strategy): int | inf}
+    # {(partitioner, strategy, pes): Engine.dispatch} -- what the adaptive
+    # staged-vs-fused policy chose per cell (choice, band occupancies,
+    # measured in-band vs dense tile counts; DESIGN.md section 9)
+    dispatch: dict = dataclasses.field(default_factory=dict)
 
     def rows(self):
         """-> (strategy, partitioner, pes, seconds) rows, serial first."""
@@ -71,12 +75,13 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
     params = {**spec.defaults, **algo_params}
     serial = _time(lambda: spec.serial(graph, **params), repeats)
 
-    parallel = {}
+    parallel, dispatch = {}, {}
     for partitioner in partitioners:
         for pes in pe_counts:
             pg = partition(graph, pes, partitioner=partitioner)
             for strategy in strategies:
                 eng = Engine(pg, strategy=strategy)
+                dispatch[(partitioner, strategy, pes)] = eng.dispatch
                 run = lambda: eng.run(algorithm, **params)
                 run()  # compile outside the timed region (paper times compute)
                 parallel[(partitioner, strategy, pes)] = _time(run, repeats)
@@ -88,7 +93,7 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
                      if parallel.get((partitioner, strategy, p), np.inf)
                      <= serial]
             cost[(partitioner, strategy)] = min(beats) if beats else float("inf")
-    return CostReport(algorithm, serial, parallel, cost)
+    return CostReport(algorithm, serial, parallel, cost, dispatch)
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,20 @@ owns the shard_map plumbing, fori/while-loop selection, frontier masking,
 and the compile cache exactly once -- ``Engine.run(program)`` is the single
 entry point, with ``pagerank``/``labelprop``/``sssp``/``bfs`` as thin
 wrappers.
+
+Two adaptive layers ride on top (DESIGN.md section 9):
+
+  * ``push_fn="auto"`` (the default) prices the partition's measured band
+    tables (``repro.kernels.blocks.choose_push``) and picks the fused
+    band-pruned kernel vs the staged dense pipeline per layout, instead of
+    being told -- the decision is recorded in ``Engine.dispatch`` and
+    surfaced by the COST harness.
+  * ``Engine.run(replan=...)`` re-partitions mid-run: the superstep loop is
+    segmented, and at segment boundaries a load-skew trigger (per-chare
+    frontier-edge counts) may rebuild the placement via
+    ``PartitionedGraph.repartition`` and carry the state across through the
+    composed relabel (``PartitionPlan.padded_map_from``) -- bit-exact for
+    min-monoid programs.
 """
 
 from __future__ import annotations
@@ -26,6 +40,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import partitioners as part_mod
 from repro.core import strategies as strat
 from repro.core.graph import PartitionedGraph
 
@@ -49,15 +64,48 @@ def make_pe_mesh(num_pes: int):
 
 
 @dataclasses.dataclass
+class ReplanPolicy:
+    """When and how ``Engine.run`` re-partitions mid-run (DESIGN.md sec. 9).
+
+    The superstep loop runs in jitted segments of ``every`` supersteps; at
+    each segment boundary the engine checkpoints state on the host and, if
+    triggered, switches the placement to ``partitioner``.  ``mode="skew"``
+    (the default) triggers when the per-chare *frontier-edge* imbalance
+    (``partition_stats(pg, frontier=...)``) exceeds ``threshold`` -- the
+    load convergence programs actually shift across supersteps;
+    ``mode="always"`` replans at every checkpoint (fixed-iteration programs
+    and tests).  ``max_replans`` bounds the total prep spent re-placing.
+    """
+
+    partitioner: str
+    every: int = 4
+    threshold: float = 1.5
+    mode: str = "skew"
+    max_replans: int = 4
+
+    def __post_init__(self):
+        if self.mode not in ("skew", "always"):
+            raise ValueError(f"unknown replan mode {self.mode!r}")
+        if self.every < 1:
+            raise ValueError("replan checkpoint interval must be >= 1")
+
+
+@dataclasses.dataclass
 class Engine:
-    """Runs vertex programs on a partitioned graph with a chosen strategy."""
+    """Runs vertex programs on a partitioned graph with a chosen strategy.
+
+    ``push_fn`` accepts ``"auto"`` (default: staged-vs-fused chosen per
+    layout from the measured band occupancy, recorded in ``self.dispatch``),
+    ``None`` (explicit staged jnp pipeline), or a callable hook
+    (``ops.make_push_fn``, used as given).
+    """
 
     pg: PartitionedGraph
     strategy: str = "sortdest"
     mesh: object = None
     segment_fn: object = None  # optional kernel override for local combines
-    push_fn: object = None  # optional fused-kernel override for the whole
-    #                         gather/transform/combine loop (ops.make_push_fn)
+    push_fn: object = "auto"  # 'auto' | None | fused-kernel hook for the
+    #                           whole gather/transform/combine loop
 
     def __post_init__(self):
         if self.strategy not in strat.STRATEGIES:
@@ -67,29 +115,93 @@ class Engine:
             self.mesh = make_pe_mesh(self.pg.num_chunks)
         if self.pg.num_chunks != self.mesh.devices.size:
             raise ValueError("num_chunks must equal mesh size")
+        if not (self.push_fn in ("auto", None) or callable(self.push_fn)):
+            raise ValueError(
+                f"push_fn must be 'auto', None, or a callable hook "
+                f"(ops.make_push_fn), got {self.push_fn!r}")
+        self._push_request = self.push_fn
+        self._bind(self.pg)
+
+    def _bind(self, pg: PartitionedGraph):
+        """Point the engine at a partition: alias its device-upload cache,
+        re-resolve the adaptive dispatch, start a fresh compile cache."""
+        self.pg = pg
         # layouts are uploaded once per PartitionedGraph and shared: engines
         # built on the same partition (a strategy sweep) alias the same
-        # device buffers instead of re-transferring them per Engine
+        # device buffers instead of re-transferring them per Engine; only
+        # the strategy's own layout is materialized and shipped (a replan
+        # never builds or uploads the edge order it will not run)
         if self.strategy in strat.PAIRWISE:
             self.arrays = self.pg.device_pairwise()
         else:
-            self.arrays = self.pg.device_arrays()
+            self.arrays = self.pg.device_arrays(
+                strat.STRATEGY_LAYOUT[self.strategy])
         self.aux = self.pg.device_aux()
         self._fn = strat.STRATEGIES[self.strategy]
         self._C, self._K = self.pg.num_chunks, self.pg.chunk_size
+        self.dispatch = self._resolve_dispatch()
         self._compiled = {}  # program.key -> jitted fn; timing must not
         #                      rebuild the closure (COST times compute only)
 
+    def _rebind(self, pg: PartitionedGraph):
+        """Replan rebind: swap to a re-partitioned layout of the same graph.
+
+        The new ``PartitionedGraph`` starts with an empty device cache, so
+        every layout buffer (edge arrays, band tables, aux planes) is
+        freshly uploaded -- nothing from the old placement can leak -- and
+        the compile cache is dropped (``chunk_size`` and band tables differ,
+        and the adaptive dispatch may flip with the new bands).
+        """
+        if pg.num_chunks != self._C:
+            raise ValueError("replan must preserve the chare count "
+                             f"({pg.num_chunks} != {self._C})")
+        self._bind(pg)
+
+    def _resolve_dispatch(self) -> dict:
+        """Resolve ``push_fn='auto'`` against the bound layout's bands.
+
+        Returns the recorded decision; sets ``self.push_fn`` to the callable
+        the strategies will actually receive.  The fused Pallas hook is only
+        *installed* on TPU (elsewhere the kernels run through the interpreter
+        -- an emulation, not an execution win); the choice itself is always
+        computed and recorded, which is what the COST harness surfaces.
+        """
+        from repro.kernels import blocks
+
+        if self._push_request != "auto":
+            self.push_fn = self._push_request
+            choice = "explicit" if callable(self._push_request) else "staged"
+            return {"choice": choice, "mode": "explicit"}
+        layout = strat.STRATEGY_LAYOUT[self.strategy]
+        if layout == "pairwise":
+            self.push_fn = None
+            return {"choice": "staged", "mode": "auto",
+                    "reason": "basic strategy has no push loop to fuse"}
+        band = self.pg.sd_band if layout == "sd" else self.pg.band
+        emax = self.pg.edge_valid.shape[1]
+        choice, occ = blocks.choose_push(band, emax, self._K,
+                                         self._C * self._K)
+        if choice == "fused" and jax.default_backend() == "tpu":
+            from repro.kernels import ops
+
+            self.push_fn = ops.make_push_fn(interpret=False)
+        else:
+            self.push_fn = None
+        return {"choice": choice, "mode": "auto", "layout": layout,
+                "threshold": blocks.BAND_OCC_FUSED_MAX, **occ}
+
     # -- shard_map plumbing -------------------------------------------------
 
-    def _smap(self, body):
+    def _smap(self, body, n_state_in=1, n_out=2):
         arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
                      for k, v in self.arrays.items()}
         aux_specs = {k: P(AXIS, None) for k in self.aux}
-        return compat.shard_map(body, mesh=self.mesh,
-                                in_specs=(arr_specs, aux_specs, P(AXIS, None)),
-                                out_specs=(P(AXIS, None), P(AXIS, None)),
-                                check_vma=False)
+        state_specs = tuple(P(AXIS, None) for _ in range(n_state_in))
+        return compat.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(arr_specs, aux_specs, *state_specs),
+            out_specs=tuple(P(AXIS, None) for _ in range(n_out)),
+            check_vma=False)
 
     def _propagate(self, vals, arrs, combiner, edge_value=None,
                    edge_semiring=None):
@@ -150,11 +262,132 @@ class Engine:
 
         return body
 
-    def run(self, program, **params) -> tuple[np.ndarray, int]:
+    # -- segmented loop (the replan path) -----------------------------------
+
+    def _make_segment_body(self, program):
+        """Like ``_make_body`` but bounded: runs up to ``nsteps`` supersteps
+        and returns (state, frontier, executed) so the host can checkpoint,
+        replan, and resume.  One compiled segment serves every length (the
+        bound is a traced operand), and chaining segments reproduces the
+        whole-loop superstep sequence exactly -- same Jacobi order, same
+        frontier masking, same quiescence accounting.
+        """
+        comb = program.combiner
+        convergence = program.fixed_iters is None
+
+        def body(arrs, aux, s0, f0, nsteps):
+            arrs = {k: v[0] for k, v in arrs.items()}
+            aux = {k: v[0] for k, v in aux.items()}
+            sent = jnp.asarray(comb.identity, s0.dtype)
+            limit = nsteps[0, 0]
+
+            def cond(carry):
+                _, _, changed, it = carry
+                return jnp.logical_and(changed, it < limit)
+
+            def step(carry):
+                state, frontier, _, it = carry
+                if convergence:
+                    vals = jnp.where(frontier, program.update(state, aux),
+                                     sent)
+                else:
+                    vals = program.update(state, aux)
+                incoming = self._propagate(vals, arrs, comb,
+                                           program.edge_value,
+                                           program.edge_semiring)
+                new = program.apply(state, incoming, aux)
+                delta = new != state
+                if convergence:
+                    changed = jax.lax.psum(
+                        delta.any().astype(jnp.int32), AXIS) > 0
+                else:
+                    changed = jnp.asarray(True)
+                return new, delta, changed, it + 1
+
+            state, frontier, _, it = jax.lax.while_loop(
+                cond, step,
+                (s0[0], f0[0] != 0, jnp.asarray(True), jnp.asarray(0)))
+            return (state[None], frontier.astype(jnp.int32)[None],
+                    jnp.full((1, 1), it, jnp.int32))
+
+        return body
+
+    def _run_segment(self, program, state, frontier, nsteps):
+        key = (program.key, "segment")
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(self._smap(self._make_segment_body(program),
+                                    n_state_in=3, n_out=3))
+            self._compiled[key] = fn
+        bound = jnp.full((self._C, 1), nsteps, jnp.int32)
+        state, frontier, it = fn(self.arrays, self.aux, state, frontier,
+                                 bound)
+        return state, frontier, int(jax.device_get(it)[0, 0])
+
+    def _move_state(self, program, state, frontier_host, new_pg):
+        """Carry checkpointed state across a replan: plan B's ``g2l`` on top
+        of plan A's ``l2g`` (the composed relabel,
+        ``PartitionPlan.padded_map_from``) scatters live slots; padding gets
+        the program's own init fill, so min-monoid programs stay bit-exact.
+        The frontier rides along (new padding enters quiesced)."""
+        move = new_pg.plan.padded_map_from(self.pg.plan)
+        live = move >= 0
+        old_flat = np.asarray(jax.device_get(state)).reshape(-1)
+        new_state = np.asarray(program.init(new_pg)).reshape(-1).copy()
+        new_state[move[live]] = old_flat[live]
+        new_f = np.zeros(new_pg.num_chunks * new_pg.chunk_size, np.int32)
+        new_f[move[live]] = frontier_host.reshape(-1)[live]
+        shape = (new_pg.num_chunks, new_pg.chunk_size)
+        return (jnp.asarray(new_state.reshape(shape)),
+                jnp.asarray(new_f.reshape(shape).astype(np.int32)))
+
+    def _should_replan(self, policy, frontier_host) -> bool:
+        if policy.mode == "always":
+            return True
+        stats = part_mod.partition_stats(self.pg, frontier=frontier_host)
+        return stats["frontier_edge_imbalance"] > policy.threshold
+
+    def _run_replanned(self, program, policy) -> tuple[np.ndarray, int]:
+        """Segmented superstep driver with mid-run repartitioning."""
+        if isinstance(policy, str):
+            policy = ReplanPolicy(partitioner=policy)
+        limit = (program.fixed_iters if program.fixed_iters is not None
+                 else program.max_iters)
+        state = jnp.asarray(program.init(self.pg))
+        frontier = jnp.ones((self._C, self._K), jnp.int32)
+        done, replans = 0, 0
+        while done < limit:
+            state, frontier, it = self._run_segment(
+                program, state, frontier, min(policy.every, limit - done))
+            done += it
+            f_host = np.asarray(jax.device_get(frontier))
+            if program.fixed_iters is None and not f_host.any():
+                break  # quiesced: last superstep changed nothing
+            if done >= limit or replans >= policy.max_replans:
+                continue
+            if not self._should_replan(policy, f_host):
+                continue
+            new_plan = part_mod.make_plan(self.pg.graph, self._C,
+                                          policy.partitioner)
+            if new_plan.same_as(self.pg.plan):
+                continue  # no-op switch: keep the resident layout
+            new_pg = self.pg.repartition(policy.partitioner, plan=new_plan)
+            state, frontier = self._move_state(program, state, f_host,
+                                               new_pg)
+            self._rebind(new_pg)
+            replans += 1
+        final = np.asarray(jax.device_get(state)).reshape(-1)
+        return final[self.pg.global_to_local], done
+
+    def run(self, program, replan=None, **params) -> tuple[np.ndarray, int]:
         """Run a vertex program to completion; returns (state, iterations).
 
         ``program`` is a registered name (params forwarded to its factory)
-        or a ``VertexProgram`` instance.
+        or a ``VertexProgram`` instance.  ``replan`` (a partitioner name or
+        a ``ReplanPolicy``) enables mid-run repartitioning: the loop runs in
+        jitted segments and the placement may switch at segment boundaries
+        (DESIGN.md section 9); without it the whole loop is one jitted
+        program, exactly as before.
         """
         from repro.core import programs as prog_mod
 
@@ -162,6 +395,9 @@ class Engine:
             program = prog_mod.make_program(program, **params)
         elif params:
             raise TypeError("params only apply to registered program names")
+
+        if replan is not None:
+            return self._run_replanned(program, replan)
 
         s0 = jnp.asarray(program.init(self.pg))
         fn = self._compiled.get(program.key)

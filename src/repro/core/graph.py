@@ -171,6 +171,13 @@ class PartitionedGraph:
     ``sd_band`` ([C, 4, NB] int32, rows src_lo/src_hi/seg_lo/seg_hi from
     ``repro.kernels.blocks.edge_bands``) record those bands for the fused
     push kernels' sparsity-aware tile dispatch.
+
+    The edge layouts are *demand-materialized* (DESIGN.md section 9): each
+    layout's radix sort + rectangle pack + band table builds on first access
+    from the shared relabeled-edge base and is then cached.  ``partition``
+    forces both layouts up front (its callers expect a fully built
+    decomposition); ``repartition`` leaves them lazy, so a mid-run replan
+    pays only for the one layout its strategy actually reads.
     """
 
     graph: Graph
@@ -179,24 +186,25 @@ class PartitionedGraph:
     vertex_valid: np.ndarray  # [C, chunk_size] 0/1
     out_degree: np.ndarray  # [C, chunk_size] int32 (>=1 to avoid div0; masked)
     out_weight: np.ndarray  # [C, chunk_size] float32 (>=1 where no out-edges)
-    src_local: np.ndarray
-    dst_global: np.ndarray
-    edge_valid: np.ndarray
-    edge_weight: np.ndarray
-    sd_src_local: np.ndarray
-    sd_dst_global: np.ndarray
-    sd_edge_valid: np.ndarray
-    sd_edge_weight: np.ndarray
-    band: np.ndarray  # [C, 4, NB] fused-kernel bands, basic layout
-    sd_band: np.ndarray  # [C, 4, NB] fused-kernel bands, sortdest layout
+    edge_valid: np.ndarray  # [C, Emax] 0/1 padding mask (shared by layouts)
     partitioner: str = "contiguous"
     global_to_local: np.ndarray | None = None  # [V] original id -> padded id
     local_to_global: np.ndarray | None = None  # [C*K] padded id -> original/-1
-    # device-upload cache (keyed "dense"/"pairwise"/"aux"): engines built on
-    # the same partition share one resident copy of every layout buffer, so a
-    # PE/strategy sweep uploads each layout once instead of once per Engine
+    plan: object = None  # the PartitionPlan this layout materializes
+    # relabeled-edge base (_EdgeBase) both layout builds consume
+    _base: object = dataclasses.field(default=None, repr=False, compare=False)
+    # demand-materialized layout cache: "basic"/"sd" -> (src, dst, w, band)
+    _lazy: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+    # device-upload cache (keyed "dense:basic"/"dense:sd"/"pairwise"/"aux"):
+    # engines built on the same partition share one resident copy of every
+    # layout buffer, so a PE/strategy sweep uploads each layout once
     _dev: dict = dataclasses.field(default_factory=dict, repr=False,
                                    compare=False)
+    # plan-independent prep products (COO endpoints, per-vertex degree and
+    # weight sums), shared with every ``repartition`` of this graph so a
+    # replan re-runs only the relabel + radix re-sort + pack
+    _prep: object = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def padded_vertices(self) -> int:
@@ -207,20 +215,98 @@ class PartitionedGraph:
         original ids)."""
         return v // self.chunk_size
 
-    def device_arrays(self) -> dict:
-        """Device-resident dense layouts (both edge orders + band metadata),
-        uploaded once per partition and shared by every Engine built on it."""
-        if "dense" not in self._dev:
+    # -- demand-materialized edge layouts -----------------------------------
+
+    def _layout(self, which: str) -> tuple:
+        """Build-or-fetch one edge layout: the bounded radix sort into the
+        (owner, tile-bucket) order, the rectangle pack, and the band table.
+        Both layouts share ``_base`` (relabeled endpoints, owner split, tile
+        ids), so a replan that only reads one order skips the other's sort
+        and pack entirely."""
+        if which not in self._lazy:
+            b = self._base
+            C, K = self.num_chunks, self.chunk_size
+            nsb = -(-K // blocks.BLOCK_V)
+            nseg = -(-self.padded_vertices // blocks.BLOCK_S)
+            key_bound = C * nsb * nseg
+            key_dtype = INT if key_bound <= 1 << 31 else np.int64
+            owner_k = b.owner.astype(key_dtype)
+            if which == "basic":
+                # source block outermost (permuted CSR order, block-granular)
+                key = (owner_k * nsb + b.src_blk) * nseg + b.seg_blk
+            else:
+                # destination segment block outermost (the paper's
+                # dest-sorted send order, block-granular)
+                key = (owner_k * nseg + b.seg_blk) * nsb + b.src_blk
+            order = _stable_argsort_bounded(key, key_bound)
+            s, d, w = _pack_edges(order, b.src, b.dst, b.wgt, b.owner,
+                                  b.per_chunk_e, C, K, b.emax)
+            band = blocks.edge_bands_grouped(b.src_blk[order],
+                                             b.seg_blk[order],
+                                             b.per_chunk_e, b.emax)
+            self._lazy[which] = (s, d, w, band)
+        return self._lazy[which]
+
+    @property
+    def src_local(self) -> np.ndarray:
+        return self._layout("basic")[0]
+
+    @property
+    def dst_global(self) -> np.ndarray:
+        return self._layout("basic")[1]
+
+    @property
+    def edge_weight(self) -> np.ndarray:
+        return self._layout("basic")[2]
+
+    @property
+    def band(self) -> np.ndarray:
+        return self._layout("basic")[3]
+
+    @property
+    def sd_src_local(self) -> np.ndarray:
+        return self._layout("sd")[0]
+
+    @property
+    def sd_dst_global(self) -> np.ndarray:
+        return self._layout("sd")[1]
+
+    @property
+    def sd_edge_weight(self) -> np.ndarray:
+        return self._layout("sd")[2]
+
+    @property
+    def sd_band(self) -> np.ndarray:
+        return self._layout("sd")[3]
+
+    @property
+    def sd_edge_valid(self) -> np.ndarray:
+        # one mask serves both layouts: row c has per_chunk_e[c] valid edges
+        return self.edge_valid
+
+    def device_arrays(self, layout: str = "both") -> dict:
+        """Device-resident dense layout arrays (edge order + band metadata),
+        uploaded once per partition and shared by every Engine built on it.
+
+        ``layout`` is ``"basic"``, ``"sd"``, or ``"both"``: engines ask for
+        their strategy's layout only (``strategies.STRATEGY_LAYOUT``), so a
+        replan uploads -- and materializes -- just what it will run.
+        """
+        if layout == "both":
+            return {**self.device_arrays("basic"), **self.device_arrays("sd")}
+        names = {
+            "basic": ("src_local", "dst_global", "edge_valid", "edge_weight",
+                      "band"),
+            "sd": ("sd_src_local", "sd_dst_global", "sd_edge_valid",
+                   "sd_edge_weight", "sd_band"),
+        }[layout]
+        key = f"dense:{layout}"
+        if key not in self._dev:
             import jax.numpy as jnp
 
-            self._dev["dense"] = {
-                k: jnp.asarray(getattr(self, k))
-                for k in ("src_local", "dst_global", "edge_valid",
-                          "edge_weight", "sd_src_local", "sd_dst_global",
-                          "sd_edge_valid", "sd_edge_weight", "band",
-                          "sd_band")
-            }
-        return self._dev["dense"]
+            self._dev[key] = {k: jnp.asarray(getattr(self, k))
+                              for k in names}
+        return self._dev[key]
 
     def device_pairwise(self) -> dict:
         """Device-resident pairwise (edge-bucketed) layout for the basic
@@ -248,6 +334,30 @@ class PartitionedGraph:
                 "vertex_valid": jnp.asarray(self.vertex_valid),
             }
         return self._dev["aux"]
+
+    def repartition(self, partitioner, plan=None) -> "PartitionedGraph":
+        """Re-place the same graph under a new policy, cheaply.
+
+        Reuses this partition's plan-independent prep products (COO source
+        expansion, per-vertex degree and out-weight sums) so only the
+        plan-dependent work re-runs: relabel gathers, the bounded radix
+        re-sort into the tile-bucket edge orders, the rectangle packs, and
+        the band tables -- and the layouts stay DEMAND-materialized, so a
+        replan whose engine reads one edge order never pays for the other's
+        sort and pack.  The returned ``PartitionedGraph`` starts with an
+        EMPTY device-upload cache -- stale band tables or edge buffers from
+        the old placement can never be reused (the engine re-uploads on
+        rebind; see ``Engine._rebind``).
+
+        ``partitioner`` names a registered policy; ``plan`` (optional)
+        supplies an already-built ``PartitionPlan`` for it (the engine's
+        replan path plans first to detect no-op switches).
+        """
+        if plan is None:
+            plan = part_mod.make_plan(self.graph, self.num_chunks,
+                                      partitioner)
+        prep = self._prep if self._prep is not None else _edge_prep(self.graph)
+        return _materialize(self.graph, plan, partitioner, prep, eager=False)
 
 
 def _stable_argsort_bounded(keys: np.ndarray, bound: int) -> np.ndarray:
@@ -295,15 +405,70 @@ def _pack_edges(order_idx, src, dst, wgt, owner, per_chunk_e, num_chunks,
     return s, d, w
 
 
+@dataclasses.dataclass(frozen=True)
+class _EdgePrep:
+    """Plan-independent prep products, computed once per graph and shared by
+    every (re)partition of it: the COO source expansion (``np.repeat`` over
+    out-degrees) and the per-vertex weight-sum bincount are both O(E) passes
+    that do not depend on vertex placement."""
+
+    src: np.ndarray  # [E] int32 COO sources, original ids
+    dst: np.ndarray  # [E] int32 COO destinations, original ids
+    wgt: np.ndarray  # [E] float32 weights (ones when unweighted)
+    out_degrees: np.ndarray  # [V] int32
+    wsum: np.ndarray  # [V] float32 per-vertex outgoing weight sums
+
+
+def _edge_prep(graph: Graph) -> _EdgePrep:
+    src = graph.src
+    wgt = graph.edge_weights
+    wsum = np.bincount(src, weights=wgt,
+                       minlength=graph.num_vertices).astype(WEIGHT)
+    return _EdgePrep(src, graph.dst, wgt, graph.out_degrees, wsum)
+
+
 def partition(graph: Graph, num_chunks: int,
               partitioner: str = "contiguous") -> PartitionedGraph:
     """Split ``graph`` into ``num_chunks`` chares under a partitioner policy.
 
     ``partitioner`` names a registered policy (``repro.core.partitioners``);
     the default reproduces the paper's contiguous equal-vertex chunks.
+    Re-placing an existing partition is cheaper via
+    ``PartitionedGraph.repartition`` (shares the prep products).
     """
-    n = graph.num_vertices
     plan = part_mod.make_plan(graph, num_chunks, partitioner)
+    return _materialize(graph, plan, partitioner, _edge_prep(graph))
+
+
+@dataclasses.dataclass(frozen=True)
+class _EdgeBase:
+    """Relabeled-edge base shared by both layout builds of one partition:
+    padded-id endpoints, owner split, and the kernel-tile ids the sort keys
+    and band tables are made of (DESIGN.md section 8).  Both layouts order a
+    chare's edges by coarse tile bucket so the fused kernels' gather/scatter
+    bands stay narrow; the bucket count is small enough
+    (C * K/BLOCK_V * V'/BLOCK_S) that graphs up to scale ~18 take a single
+    int16 radix pass per layout."""
+
+    src: np.ndarray  # [E] int32 padded-id sources
+    dst: np.ndarray  # [E] int32 padded-id destinations
+    wgt: np.ndarray  # [E] float32
+    owner: np.ndarray  # [E] owning chunk of each edge's source
+    per_chunk_e: np.ndarray  # [C]
+    emax: int
+    src_blk: np.ndarray  # [E] gather-side tile id (local source / BLOCK_V)
+    seg_blk: np.ndarray  # [E] scatter-side tile id (padded dest / BLOCK_S)
+
+
+def _materialize(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
+                 eager: bool = True) -> PartitionedGraph:
+    """Build the chare decomposition for one ``PartitionPlan``.
+
+    ``eager`` forces both edge layouts (``partition``'s contract: a fully
+    built decomposition); ``repartition`` passes ``eager=False`` so a replan
+    materializes only the layout its engine strategy reads, on demand.
+    """
+    num_chunks = plan.num_chunks
     chunk_size = plan.chunk_size
     padded = num_chunks * chunk_size
     g2l, l2g = plan.relabel()
@@ -311,81 +476,45 @@ def partition(graph: Graph, num_chunks: int,
     # relabel every edge endpoint into padded-id space; int32 halves the
     # memory traffic of the gathers/scatters below
     g2l32 = g2l.astype(INT)
-    src = g2l32[graph.src]
-    dst = g2l32[graph.dst]
-    wgt = graph.edge_weights
+    src = g2l32[prep.src]
+    dst = g2l32[prep.dst]
     owner = src // chunk_size
 
     live = l2g >= 0
     deg = np.ones(padded, dtype=INT)  # 1 for padding (avoids div-by-zero)
-    deg[live] = np.maximum(graph.out_degrees[l2g[live]], 1)
+    deg[live] = np.maximum(prep.out_degrees[l2g[live]], 1)
     vertex_valid = live.astype(INT)
-    wsum = np.bincount(graph.src, weights=wgt, minlength=n).astype(WEIGHT)
     out_weight = np.ones(padded, dtype=WEIGHT)
-    out_weight[live] = np.where(wsum[l2g[live]] > 0, wsum[l2g[live]], 1.0)
+    out_weight[live] = np.where(prep.wsum[l2g[live]] > 0,
+                                prep.wsum[l2g[live]], 1.0)
 
     per_chunk_e = np.bincount(owner, minlength=num_chunks)
     emax = max(int(per_chunk_e.max()) if len(src) else 1, 1)
-
-    # Both layouts order a chare's edges by coarse tile bucket so the fused
-    # kernels' gather/scatter bands stay narrow (DESIGN.md section 8).  The
-    # tile buckets are kernel blocks of the local source (gather side,
-    # BLOCK_V) and of the padded destination (scatter side, BLOCK_S); the
-    # stable sort keeps the relabeled-CSR order inside each bucket.  One
-    # bounded radix sort per layout yields the lexicographic
-    # (owner, bucket) order that `_pack_edges` needs (owner-grouped); the
-    # bucket count is small enough (C * K/BV * V'/BS) that graphs up to
-    # scale ~18 take a single int16 radix pass.
-    src_blk = (src - owner * chunk_size) // blocks.BLOCK_V
-    seg_blk = dst // blocks.BLOCK_S
-    nsb = -(-chunk_size // blocks.BLOCK_V)
-    nseg = -(-padded // blocks.BLOCK_S)
-    key_bound = num_chunks * nsb * nseg
-    key_dtype = INT if key_bound <= 1 << 31 else np.int64
-    owner_k = owner.astype(key_dtype)
-    # basic: source block outermost (the permuted CSR order, block-granular)
-    b_key = (owner_k * nsb + src_blk) * nseg + seg_blk
-    # sort-destination: destination segment block outermost (the paper's
-    # dest-sorted send order, block-granular)
-    sd_key = (owner_k * nseg + seg_blk) * nsb + src_blk
-    b_order = _stable_argsort_bounded(b_key, key_bound)
-    sd_order = _stable_argsort_bounded(sd_key, key_bound)
-    pack = lambda order_idx: _pack_edges(order_idx, src, dst, wgt, owner,
-                                         per_chunk_e, num_chunks, chunk_size,
-                                         emax)
-    b_s, b_d, b_w = pack(b_order)
-    sd_s, sd_d, sd_w = pack(sd_order)
     # one validity mask serves both layouts: row c has per_chunk_e[c] edges
     edge_valid = (np.arange(emax) < per_chunk_e[:, None]).astype(INT)
-    # per-edge-block tile bands for the fused kernels' sparsity dispatch,
-    # computed vectorized alongside the layout build (owner-grouped flat
-    # arrays; one reduceat per bound, no [C, Emax] temporaries)
-    bands = lambda order_idx: blocks.edge_bands_grouped(
-        src_blk[order_idx], seg_blk[order_idx], per_chunk_e, emax)
-    band = bands(b_order)
-    sd_band = bands(sd_order)
+    base = _EdgeBase(src, dst, prep.wgt, owner, per_chunk_e, emax,
+                     src_blk=(src - owner * chunk_size) // blocks.BLOCK_V,
+                     seg_blk=dst // blocks.BLOCK_S)
 
-    return PartitionedGraph(
+    pg = PartitionedGraph(
         graph=graph,
         num_chunks=num_chunks,
         chunk_size=chunk_size,
         vertex_valid=vertex_valid.reshape(num_chunks, chunk_size),
         out_degree=deg.reshape(num_chunks, chunk_size),
         out_weight=out_weight.reshape(num_chunks, chunk_size),
-        src_local=b_s,
-        dst_global=b_d,
         edge_valid=edge_valid,
-        edge_weight=b_w,
-        sd_src_local=sd_s,
-        sd_dst_global=sd_d,
-        sd_edge_valid=edge_valid,
-        sd_edge_weight=sd_w,
-        band=band,
-        sd_band=sd_band,
         partitioner=partitioner,
         global_to_local=g2l,
         local_to_global=l2g,
+        plan=plan,
+        _base=base,
+        _prep=prep,
     )
+    if eager:
+        pg._layout("basic")
+        pg._layout("sd")
+    return pg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,10 +536,11 @@ class PairwiseLayout:
 def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
     """Bucket edges by (source chunk, dest chunk), vectorized: one stable
     argsort over flattened bucket ids replaces the seed's O(C^2) scan loop."""
+    prep = pg._prep if pg._prep is not None else _edge_prep(pg.graph)
     g2l32 = pg.global_to_local.astype(INT)
-    src = g2l32[pg.graph.src]
-    dst = g2l32[pg.graph.dst]
-    wgt = pg.graph.edge_weights
+    src = g2l32[prep.src]
+    dst = g2l32[prep.dst]
+    wgt = prep.wgt
     K, C = pg.chunk_size, pg.num_chunks
     bucket = (src // K) * C + dst // K  # flattened (sc, dc)
     counts = np.bincount(bucket, minlength=C * C)

@@ -66,6 +66,16 @@ class PartitionPlan:
         out[self.order] = chunk_of_rank
         return out
 
+    def _rank_positions(self) -> np.ndarray:
+        """[V] padded id of each placement rank r (rank r is ``order[r]``)."""
+        C, K, V = self.num_chunks, self.chunk_size, self.num_vertices
+        starts = np.zeros(C, dtype=np.int64)
+        np.cumsum(self.chunk_counts[:-1], out=starts[1:])
+        chunk_of_rank = np.repeat(np.arange(C, dtype=np.int64),
+                                  self.chunk_counts)
+        slot = np.arange(V, dtype=np.int64) - starts[chunk_of_rank]
+        return chunk_of_rank * K + slot
+
     def relabel(self) -> tuple[np.ndarray, np.ndarray]:
         """-> (global_to_local [V], local_to_global [C*K]).
 
@@ -73,17 +83,64 @@ class PartitionPlan:
         original id at padded slot p, or -1 for padding.
         """
         C, K, V = self.num_chunks, self.chunk_size, self.num_vertices
-        starts = np.zeros(C, dtype=np.int64)
-        np.cumsum(self.chunk_counts[:-1], out=starts[1:])
-        chunk_of_rank = np.repeat(np.arange(C, dtype=np.int64),
-                                  self.chunk_counts)
-        slot = np.arange(V, dtype=np.int64) - starts[chunk_of_rank]
-        pos = chunk_of_rank * K + slot
+        pos = self._rank_positions()
         g2l = np.empty(V, dtype=np.int64)
         g2l[self.order] = pos
         l2g = np.full(C * K, -1, dtype=np.int64)
         l2g[pos] = self.order
         return g2l, l2g
+
+    # -- composition algebra (DESIGN.md section 9) --------------------------
+
+    def same_as(self, other: "PartitionPlan") -> bool:
+        """Placement equality (dataclass ``==`` is ambiguous on arrays)."""
+        return (self.num_chunks == other.num_chunks
+                and np.array_equal(self.order, other.order)
+                and np.array_equal(self.chunk_counts, other.chunk_counts))
+
+    def compose(self, other: "PartitionPlan") -> "PartitionPlan":
+        """Sequential application: ``self`` then ``other``.
+
+        ``other`` is a plan over THIS plan's *placement ranks* (its ``order``
+        entries name ranks of ``self``, i.e. vertex ids of the relabeled
+        graph); the composed plan places the corresponding ORIGINAL ids
+        directly where ``other`` sends their ranks.  This is what lets a
+        replan apply plan B's ``g2l`` on top of plan A's without translating
+        chare state back to original ids: ranks compose as permutations.
+        Identity: composing with the ``contiguous`` plan of the same shape on
+        either side is a no-op; composition is associative.
+        """
+        if other.num_vertices != self.num_vertices:
+            raise ValueError(
+                f"cannot compose plans over {self.num_vertices} and "
+                f"{other.num_vertices} vertices")
+        return PartitionPlan(other.num_chunks, self.order[other.order],
+                             other.chunk_counts.copy())
+
+    def rebase(self, old: "PartitionPlan") -> "PartitionPlan":
+        """Express THIS plan (over original ids) on top of ``old``'s
+        placement: the returned delta plan is over ``old``'s ranks and
+        satisfies ``old.compose(delta).same_as(self)``."""
+        if old.num_vertices != self.num_vertices:
+            raise ValueError("rebase requires plans over the same vertex set")
+        inv = np.empty(old.num_vertices, dtype=np.int64)
+        inv[old.order] = np.arange(old.num_vertices, dtype=np.int64)
+        return PartitionPlan(self.num_chunks, inv[self.order],
+                             self.chunk_counts.copy())
+
+    def padded_map_from(self, old: "PartitionPlan") -> np.ndarray:
+        """[C_old * K_old] old padded id -> new padded id (-1 at padding).
+
+        The engine's replan state move: plan B's ``g2l`` applied on top of
+        plan A's ``l2g``, built purely in rank space (``rebase`` + the two
+        rank->padded-slot tables) -- original vertex ids never materialize.
+        """
+        delta = self.rebase(old)
+        old_pos = old._rank_positions()
+        new_pos = self._rank_positions()
+        m = np.full(old.num_chunks * old.chunk_size, -1, dtype=np.int64)
+        m[old_pos[delta.order]] = new_pos
+        return m
 
     def edges_per_chunk(self, graph: "Graph") -> np.ndarray:
         """[C] out-edges owned by each chunk under this placement."""
@@ -213,12 +270,19 @@ register_partitioner(PartitionerSpec(
 # ---------------------------------------------------------------------------
 
 
-def partition_stats(pg: "PartitionedGraph") -> dict:
+def partition_stats(pg: "PartitionedGraph", frontier=None) -> dict:
     """Per-chare load + padding metrics for one materialized partition.
 
     ``edge_imbalance`` is max/mean per-chare edges (1.0 = perfectly even);
     ``*_padding_waste`` is the fraction of the padded rectangle that is
     padding (wasted memory and wasted lanes in every segment combine).
+
+    ``frontier`` (optional ``[C, K]`` 0/1, vertices whose state changed last
+    superstep) adds the *active* load view convergence programs shift across
+    supersteps: ``frontier_edges`` counts each chare's out-edges whose source
+    is in the frontier, and ``frontier_edge_imbalance`` is their max/mean --
+    the quantity the engine's skew-triggered replan watches (DESIGN.md
+    section 9).
     """
     C, K = pg.num_chunks, pg.chunk_size
     edges = pg.edge_valid.sum(axis=1).astype(np.int64)
@@ -227,7 +291,24 @@ def partition_stats(pg: "PartitionedGraph") -> dict:
     emax = int(pg.edge_valid.shape[1])
     mean_e = E / C if C else 0.0
     mean_v = V / C if C else 0.0
+    front = {}
+    if frontier is not None:
+        # true out-degrees (pg.out_degree clips degree-0 vertices to 1 for
+        # the PageRank divide) gathered through the relabel, frontier-masked
+        l2g = pg.local_to_global
+        deg = np.zeros(C * K, dtype=np.int64)
+        live = l2g >= 0
+        deg[live] = pg.graph.out_degrees[l2g[live]]
+        mask = np.asarray(frontier).reshape(C, K) != 0
+        fe = np.where(mask, deg.reshape(C, K), 0).sum(axis=1)
+        total = int(fe.sum())
+        front = {
+            "frontier_edges": fe,
+            "frontier_edge_imbalance":
+                float(fe.max() * C / total) if total else 1.0,
+        }
     return {
+        **front,
         "partitioner": pg.partitioner,
         "edges_per_chare": edges,
         "vertices_per_chare": verts,

@@ -245,3 +245,13 @@ STRATEGIES = {
 
 # Strategies that read the pairwise (edge-bucketed) layout instead of the CSR.
 PAIRWISE = {"basic"}
+
+# Which edge layout each strategy's local combine reads -- the engine's
+# adaptive dispatch prices the matching band table ("pairwise" has no push
+# loop to hook: basic's receive side combines already-gathered payloads).
+STRATEGY_LAYOUT = {
+    "reduction": "basic",
+    "sortdest": "sd",
+    "pairs": "sd",
+    "basic": "pairwise",
+}

@@ -103,3 +103,74 @@ def band_tiles(band: np.ndarray) -> int:
     width = lambda lo, hi: np.maximum(hi - lo + 1, 0)
     return int(width(band[..., 0, :], band[..., 1, :]).sum()
                + width(band[..., 2, :], band[..., 3, :]).sum())
+
+
+# ---------------------------------------------------------------------------
+# Staged-vs-fused dispatch cost (DESIGN.md section 9)
+# ---------------------------------------------------------------------------
+
+# The fused kernel wins exactly when band pruning prunes.  Each layout's
+# OUTERMOST sort side is narrow by construction (sortdest sorts by segment
+# block first, so its scatter bands prune on any graph; the basic layout
+# sorts by source block first, so its gather bands do) -- the graph carries
+# the signal on the INNER side, where near-uniform graphs make each edge
+# block span nearly the whole per-chare tile range and the fused kernel's
+# dynamic loop degenerates to the dense grid.  With no pruning, the staged
+# dense grid's static schedule pipelines better and the [E] intermediate
+# round trip is the only price.  The rule therefore prices the WORSE of the
+# two sides, which is layout-agnostic.  Measured on the scale-13 stand-ins
+# (both layouts, 1-8 chares): power-law RMAT max-side occupancy 0.08-0.30,
+# near-uniform erdos-renyi 0.63-0.97 -- 0.5 splits them with wide margins.
+BAND_OCC_FUSED_MAX = 0.5
+
+
+def dense_grid(emax: int, V: int, S: int, chares: int = 1
+               ) -> tuple[int, int]:
+    """(gather_tiles, scatter_tiles) of the staged dense grid: every
+    (edge-block x vertex-block) and (segment-block x edge-block) tile."""
+    ne = num_edge_blocks(emax)
+    return chares * ne * (-(-V // BLOCK_V)), chares * (-(-S // BLOCK_S)) * ne
+
+
+def band_occupancy(band: np.ndarray, emax: int, V: int, S: int) -> dict:
+    """Per-side in-band tile counts and occupancies for a band table.
+
+    ``band`` is ``[C, 4, NB]`` (or ``[4, NB]`` for a single row); ``V`` the
+    gather-side vertex count per chare, ``S`` the scatter-side segment count.
+    ``*_occupancy`` is in-band / dense tiles (1.0 = no pruning at all).
+    """
+    chares = int(band.shape[0]) if band.ndim == 3 else 1
+    dense_g, dense_s = dense_grid(emax, V, S, chares)
+    width = lambda lo, hi: int(np.maximum(hi - lo + 1, 0).sum())
+    gather = width(band[..., 0, :], band[..., 1, :])
+    scatter = width(band[..., 2, :], band[..., 3, :])
+    return {
+        "gather_tiles": gather,
+        "scatter_tiles": scatter,
+        "dense_gather_tiles": dense_g,
+        "dense_scatter_tiles": dense_s,
+        "tiles_fused": gather + scatter,
+        "tiles_staged": dense_g + dense_s,
+        "gather_occupancy": gather / dense_g if dense_g else 1.0,
+        "scatter_occupancy": scatter / dense_s if dense_s else 1.0,
+        "tile_occupancy": (gather + scatter) / (dense_g + dense_s)
+                          if dense_g + dense_s else 1.0,
+    }
+
+
+def choose_push(band: np.ndarray, emax: int, V: int, S: int
+                ) -> tuple[str, dict]:
+    """-> ('fused' | 'staged', occupancy dict): the adaptive dispatch rule.
+
+    Fused when the measured bands actually prune on BOTH sides
+    (``max_occupancy <= BAND_OCC_FUSED_MAX``), staged when either side
+    degenerates toward the dense grid -- which side carries the graph
+    signal depends on the layout's sort order, so the rule prices the
+    worse one.
+    """
+    occ = band_occupancy(band, emax, V, S)
+    occ["max_occupancy"] = max(occ["gather_occupancy"],
+                               occ["scatter_occupancy"])
+    choice = ("fused" if occ["max_occupancy"] <= BAND_OCC_FUSED_MAX
+              else "staged")
+    return choice, occ

@@ -1,6 +1,21 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose -- tests see the
-real (single) device; multi-device behaviour is tested via subprocesses in
-test_multidevice.py / test_elastic.py (the dry-run owns its own flags)."""
+"""Shared fixtures + the session-scoped graph/serial-reference cache.
+
+NOTE: no XLA_FLAGS here on purpose -- tests see the real (single) device;
+multi-device behaviour is tested via subprocesses in test_multidevice.py /
+test_elastic.py (the dry-run owns its own flags).
+
+The graph builders and serial golden references used to be duplicated across
+test_programs / test_fused / test_partitioners; they live here once, behind
+``functools.lru_cache`` memos (process == pytest session, so the caches are
+session-scoped by construction).  ``Graph`` is a frozen dataclass and the
+cached reference arrays are shared -- tests must treat both as READ-ONLY.
+
+Test modules import the name tuples for parametrization
+(``from conftest import EQUIV_GRAPHS``; the tests dir is on sys.path in this
+non-package layout) and call the cached accessors inside the test body.
+"""
+
+import functools
 
 import numpy as np
 import pytest
@@ -9,3 +24,88 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Graph builders (one registry; names double as pytest parameter ids)
+# ---------------------------------------------------------------------------
+
+
+def _builders():
+    from repro.core import graph as G
+
+    return {
+        # the cross-strategy / cross-partitioner equivalence trio
+        "ring12": lambda: G.ring(12),
+        "two_cliques10": lambda: G.two_cliques(10),
+        "rmat6": lambda: G.rmat(6, 300, seed=2),
+        # band-metadata fixture (larger, multi-tile)
+        "rmat10": lambda: G.rmat(10, 4000, seed=3),
+        # degenerate shapes the padding/relabel machinery must survive
+        "single_vertex": lambda: G.from_edges(
+            1, np.array([], np.int32), np.array([], np.int32)),
+        "isolated_vertices": lambda: G.from_edges(  # vertices 3..6 edgeless
+            7, np.array([0, 1], np.int32), np.array([1, 2], np.int32)),
+        "ring13": lambda: G.ring(13),  # V % P != 0 for P in {2,3,4,5}
+        "empty_chunk": lambda: G.from_edges(  # all edges in the low ids
+            9, np.array([0, 0, 1], np.int32), np.array([1, 2, 2], np.int32)),
+    }
+
+
+# parametrization tuples (collection-time; builders run lazily, cached)
+EQUIV_GRAPHS = ("ring12", "two_cliques10", "rmat6")
+DEGENERATE_GRAPHS = ("single_vertex", "isolated_vertices", "ring13",
+                     "empty_chunk")
+BAND_GRAPHS = ("rmat10", "ring13", "isolated_vertices", "single_vertex")
+
+ALL_PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
+ALL_STRATEGIES = ("reduction", "sortdest", "basic", "pairs")
+
+
+@functools.lru_cache(maxsize=None)
+def graph(name):
+    """Session-cached base graph by registry name (read-only)."""
+    return _builders()[name]()
+
+
+@functools.lru_cache(maxsize=None)
+def program_graph(algo, gname):
+    """Graph prepared for a program (weights attached / symmetrized)."""
+    from repro.core import get_spec
+    from repro.core.graph import random_weights
+
+    spec = get_spec(algo)
+    g = graph(gname)
+    if spec.weighted:
+        g = random_weights(g, seed=5)
+    return spec.prepare_graph(g)
+
+
+@functools.lru_cache(maxsize=None)
+def serial_ref(algo, gname, params_items=()):
+    """Session-cached serial golden reference (read-only)."""
+    from repro.core import get_spec
+
+    return get_spec(algo).run_serial(program_graph(algo, gname),
+                                     **dict(params_items))
+
+
+def source_params(spec):
+    """A non-zero source exercises the global->local source translation."""
+    return {"source": 3} if "source" in spec.defaults else {}
+
+
+def race(fn_a, fn_b, repeats=5):
+    """Best-of-N for two timed contenders, interleaved so a load spike on a
+    shared CI runner hits both rather than biasing one."""
+    import time
+
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b

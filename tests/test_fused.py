@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 import jax
+from conftest import (ALL_PARTITIONERS, BAND_GRAPHS, graph, program_graph,
+                      serial_ref, source_params)
 from repro.core import (Engine, get_spec, load_dataset, partition, rmat,
                         run_parallel)
 from repro.core import graph as G
@@ -152,19 +154,8 @@ def test_segment_reduce_int_add_keeps_precision():
 
 
 # ---------------------------------------------------------------------------
-# Band metadata: partitioners x degenerate partitions
+# Band metadata: partitioners x degenerate partitions (graphs from conftest)
 # ---------------------------------------------------------------------------
-
-ALL_PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
-
-BAND_GRAPHS = {
-    "rmat": lambda: rmat(10, 4000, seed=3),
-    "indivisible": lambda: G.ring(13),  # V % P != 0
-    "isolated": lambda: G.from_edges(  # vertices 3..6 edgeless
-        7, np.array([0, 1], np.int32), np.array([1, 2], np.int32)),
-    "single_vertex": lambda: G.from_edges(
-        1, np.array([], np.int32), np.array([], np.int32)),
-}
 
 
 def _check_bands(band, src, dst, valid):
@@ -191,7 +182,7 @@ def _check_bands(band, src, dst, valid):
 @pytest.mark.parametrize("pname", ALL_PARTITIONERS)
 @pytest.mark.parametrize("gname", sorted(BAND_GRAPHS))
 def test_band_metadata_correct(pname, gname):
-    g = BAND_GRAPHS[gname]()
+    g = graph(gname)
     for chunks in (1, 2, 5):
         pg = G.partition(g, chunks, partitioner=pname)
         _check_bands(pg.band, pg.src_local, pg.dst_global, pg.edge_valid)
@@ -217,8 +208,6 @@ def test_band_pruning_tile_ratio_on_rmat_standin():
 # Engine hook: the fused kernel under every strategy x program x partitioner
 # ---------------------------------------------------------------------------
 
-HOOK_GRAPH = lambda: rmat(6, 300, seed=2)
-
 
 @pytest.mark.parametrize("partitioner", ALL_PARTITIONERS)
 @pytest.mark.parametrize("strategy", ("reduction", "sortdest", "basic",
@@ -229,12 +218,9 @@ def test_push_hook_equivalence(name, strategy, partitioner):
     Pallas segment_fn for basic's receive side) every cell must still match
     the serial reference: bit-exact for min monoids, 1e-3 for add."""
     spec = get_spec(name)
-    g = HOOK_GRAPH()
-    if spec.weighted:
-        g = G.random_weights(g, seed=5)
-    g = spec.prepare_graph(g)
-    params = {"source": 3} if "source" in spec.defaults else {}
-    ref = spec.run_serial(g, **params)
+    g = program_graph(name, "rmat6")
+    params = source_params(spec)
+    ref = serial_ref(name, "rmat6", tuple(sorted(params.items())))
     got, iters = run_parallel(g, name, num_pes=1, strategy=strategy,
                               partitioner=partitioner,
                               push_fn=ops.make_push_fn(),
@@ -289,14 +275,23 @@ def test_push_hook_falls_back_on_undeclared_transform():
 
 def test_engines_share_device_buffers_across_strategy_sweep():
     """Satellite regression: a strategy sweep over one partition must not
-    re-upload layouts -- every Engine aliases the same device arrays."""
+    re-upload layouts -- engines on the same layout alias the same device
+    arrays, and each strategy ships only its own layout's buffers."""
     pg = partition(rmat(6, 200, seed=1), 1)
     e1 = Engine(pg, strategy="sortdest")
-    e2 = Engine(pg, strategy="reduction")
-    assert e1.arrays is e2.arrays  # one upload, shared dict
+    e2 = Engine(pg, strategy="pairs")
+    assert e1.arrays is e2.arrays  # both read the sd layout: one upload
     for k in e1.arrays:
         assert e1.arrays[k] is e2.arrays[k]
-    assert e1.aux is e2.aux
+    r1 = Engine(pg, strategy="reduction")
+    r2 = Engine(pg, strategy="reduction")
+    assert r1.arrays is r2.arrays  # basic layout shared the same way
+    assert e1.aux is r1.aux
+    # the sd engines never shipped the basic layout and vice versa
+    assert set(e1.arrays) == {"sd_src_local", "sd_dst_global",
+                              "sd_edge_valid", "sd_edge_weight", "sd_band"}
+    assert set(r1.arrays) == {"src_local", "dst_global", "edge_valid",
+                              "edge_weight", "band"}
     # pairwise layout cached the same way
     b1 = Engine(pg, strategy="basic")
     b2 = Engine(pg, strategy="basic")
@@ -328,11 +323,11 @@ def test_run_cost_partitions_once_per_cell():
     uploads = []
     orig = PartitionedGraph.device_arrays
 
-    def counting(self):
-        first = "dense" not in self._dev
-        out = orig(self)
+    def counting(self, layout="both"):
+        first = layout != "both" and f"dense:{layout}" not in self._dev
+        out = orig(self, layout)
         if first:
-            uploads.append(self)
+            uploads.append((id(self), layout))
         return out
 
     PartitionedGraph.device_arrays = counting
@@ -344,4 +339,7 @@ def test_run_cost_partitions_once_per_cell():
                  iters=2)
     finally:
         PartitionedGraph.device_arrays = orig
-    assert len(uploads) == 1  # 3 strategies, one upload
+    # 3 strategies, one partition: exactly one upload per layout in use
+    # (sd shared by sortdest+pairs, basic by reduction)
+    assert sorted(u[1] for u in uploads) == ["basic", "sd"]
+    assert len({u[0] for u in uploads}) == 1

@@ -80,6 +80,32 @@ for strat in ("reduction", "sortdest", "pairs"):
 results["push_hook_ok"] = bool(hook_ok)
 results["push_hook_max_err"] = hook_err
 
+# ---- 1d) mid-run repartition at real multi-PE: 4->4 partitioner switches
+# with the state carried across the composed relabel; min programs must stay
+# bit-exact vs the serial references, PageRank within float reorder noise
+from repro.core.engine import ReplanPolicy
+replan_ok = True
+replan_err = 0.0
+for pes in (2, 8):
+    for target in ("edge_balanced", "striped", "degree_sorted"):
+        got_s, _ = run_parallel(gw, "sssp", num_pes=pes, strategy="sortdest",
+                                partitioner="contiguous", source=7,
+                                replan=ReplanPolicy(target, every=2,
+                                                    mode="always"))
+        replan_ok &= bool(np.array_equal(got_s, sssp_ref))
+    got_b, _ = run_parallel(g, "bfs", num_pes=pes, strategy="reduction",
+                            partitioner="striped", source=7,
+                            replan=ReplanPolicy("degree_sorted", every=3,
+                                                mode="always"))
+    replan_ok &= bool(np.array_equal(got_b, bfs_ref))
+    got_p, _ = run_parallel(g, "pagerank", num_pes=pes, strategy="sortdest",
+                            partitioner="contiguous",
+                            replan=ReplanPolicy("edge_balanced", every=5,
+                                                mode="always"))
+    replan_err = max(replan_err, float(np.max(np.abs(got_p - ref))))
+results["replan_ok"] = bool(replan_ok)
+results["replan_pagerank_err"] = replan_err
+
 # ---- 2) sharded MoE == dense reference ------------------------------------
 from repro.models.config import ModelConfig
 from repro.models import moe as MOE
@@ -191,6 +217,8 @@ def test_multidevice_suite():
     assert res["partitioner_ok"]
     assert res["push_hook_ok"]
     assert res["push_hook_max_err"] < 1e-3
+    assert res["replan_ok"]
+    assert res["replan_pagerank_err"] < 1e-3
     assert res["moe_err"] == 0.0
     assert res["ring_attn_err"] < 2e-6
     assert res["train_loss_delta"] < 1e-3

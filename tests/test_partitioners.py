@@ -6,30 +6,14 @@ in permuted padded-id space, but *callers* only ever see original vertex ids
 (sources go in as original ids, results come out in original order).
 """
 
-import time
-
 import numpy as np
 import pytest
 
+from conftest import (ALL_PARTITIONERS, ALL_STRATEGIES, DEGENERATE_GRAPHS,
+                      graph, race)
 from repro.core import graph as G
 from repro.core import partitioners as PT
 from repro.core import run_parallel
-
-ALL_PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
-ALL_STRATEGIES = ("reduction", "sortdest", "basic", "pairs")
-
-# Degenerate shapes the padding/relabel machinery must survive: a single
-# vertex, isolated (edgeless) vertices, V not divisible by P, and splits
-# where some chunk owns zero edges (or zero vertices).
-DEGENERATE = {
-    "single_vertex": lambda: G.from_edges(
-        1, np.array([], np.int32), np.array([], np.int32)),
-    "isolated_vertices": lambda: G.from_edges(  # vertices 3..6 edgeless
-        7, np.array([0, 1], np.int32), np.array([1, 2], np.int32)),
-    "indivisible": lambda: G.ring(13),  # 13 vertices, P in {2,3,4,5}
-    "empty_chunk": lambda: G.from_edges(  # all edges in the low ids
-        9, np.array([0, 0, 1], np.int32), np.array([1, 2, 2], np.int32)),
-}
 
 
 def _reconstruct(pg, s_arr, d_arr, m_arr, w_arr):
@@ -89,7 +73,7 @@ def test_plan_invariants(pname, chunks):
 
 def test_contiguous_is_identity_relabel():
     for n, chunks in ((12, 4), (13, 4), (1, 3)):
-        pg = G.partition(G.ring(n) if n > 1 else DEGENERATE["single_vertex"](),
+        pg = G.partition(G.ring(n) if n > 1 else graph("single_vertex"),
                          chunks)
         assert np.array_equal(pg.global_to_local, np.arange(n))
 
@@ -143,9 +127,9 @@ def test_partition_stats_fields():
 
 
 @pytest.mark.parametrize("pname", ALL_PARTITIONERS)
-@pytest.mark.parametrize("gname", sorted(DEGENERATE))
+@pytest.mark.parametrize("gname", sorted(DEGENERATE_GRAPHS))
 def test_degenerate_layouts_preserve_edges(pname, gname):
-    g = DEGENERATE[gname]()
+    g = graph(gname)
     want = sorted(zip(g.src.tolist(), g.dst.tolist(),
                       g.edge_weights.tolist()))
     for chunks in (1, 2, 3, 5):
@@ -186,8 +170,8 @@ def test_permuted_sortdest_layout_is_dest_sorted(pname):
 def test_degenerate_graphs_all_policies_all_strategies(pname, strategy):
     from repro.core import programs as P
 
-    for gname, gf in DEGENERATE.items():
-        g = gf()
+    for gname in DEGENERATE_GRAPHS:
+        g = graph(gname)
         ref, _ = P.bfs_serial(g, source=0)
         got, _ = run_parallel(g, "bfs", num_pes=1, strategy=strategy,
                               partitioner=pname, source=0)
@@ -255,20 +239,6 @@ def _pairwise_loop_seed(pg):
     return s, d, m, w
 
 
-def _race(fn_a, fn_b, repeats=5):
-    """Best-of-N for two contenders, interleaved so a load spike on a shared
-    CI runner hits both rather than biasing one."""
-    best_a = best_b = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn_a()
-        best_a = min(best_a, time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        fn_b()
-        best_b = min(best_b, time.perf_counter() - t0)
-    return best_a, best_b
-
-
 def test_vectorized_layouts_match_seed_loops():
     g = G.rmat(8, 3000, seed=9, weighted=True)
     pg = G.partition(g, 4)
@@ -312,7 +282,7 @@ def test_vectorized_prep_faster_than_seed_loops():
         _pairwise_loop_seed(pg)
 
     prep_vectorized(), prep_loops()  # warm caches
-    t_vec, t_loop = _race(prep_vectorized, prep_loops)
+    t_vec, t_loop = race(prep_vectorized, prep_loops)
     assert t_vec < t_loop, f"vectorized {t_vec:.3f}s vs loops {t_loop:.3f}s"
 
 

@@ -10,48 +10,45 @@ vertex ids (the relabel invariant: permuted placement must be invisible at
 the API boundary).
 """
 
+import os
+
 import numpy as np
 import pytest
 
+from conftest import (ALL_PARTITIONERS, ALL_STRATEGIES, EQUIV_GRAPHS,
+                      program_graph, serial_ref, source_params)
 from repro.core import (Engine, get_spec, make_program, partition,
                         partitioner_names, registered_names, ring, rmat,
-                        run_parallel, two_cliques)
+                        run_parallel)
 from repro.core import programs as P
-from repro.core.graph import from_edges, random_weights
+from repro.core.graph import from_edges
 
-STRATEGIES = ("reduction", "sortdest", "basic", "pairs")
-PARTITIONERS = ("contiguous", "edge_balanced", "striped", "degree_sorted")
-
-GRAPHS = {
-    "ring": lambda: ring(12),
-    "two_cliques": lambda: two_cliques(10),
-    "rmat": lambda: rmat(6, 300, seed=2),
-}
+# CI matrix leg (REPRO_PUSH_FN=staged|fused) forces the push hook both ways
+# through the whole sweep, guarding both branches of the engine's 'auto'
+# dispatch; unset, the sweep runs the default adaptive path.
+_FORCED_PUSH = os.environ.get("REPRO_PUSH_FN")
 
 
-def _graph_for(spec, gname):
-    g = GRAPHS[gname]()
-    if spec.weighted:
-        g = random_weights(g, seed=5)
-    return spec.prepare_graph(g)
+def _push_kwargs():
+    if _FORCED_PUSH is None:
+        return {}
+    from repro.kernels import ops
+
+    return {"push_fn": ops.make_push_fn(fused=_FORCED_PUSH == "fused")}
 
 
-def _params_for(spec):
-    # a non-zero source exercises the global->local source translation
-    return {"source": 3} if "source" in spec.defaults else {}
-
-
-@pytest.mark.parametrize("partitioner", PARTITIONERS)
-@pytest.mark.parametrize("strategy", STRATEGIES)
-@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("partitioner", ALL_PARTITIONERS)
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("gname", sorted(EQUIV_GRAPHS))
 @pytest.mark.parametrize("name", sorted(P.PROGRAMS))
 def test_cross_strategy_equivalence(name, gname, strategy, partitioner):
     spec = get_spec(name)
-    g = _graph_for(spec, gname)
-    params = _params_for(spec)
-    ref = spec.run_serial(g, **params)
+    g = program_graph(name, gname)
+    params = source_params(spec)
+    ref = serial_ref(name, gname, tuple(sorted(params.items())))
     got, iters = run_parallel(g, name, num_pes=1, strategy=strategy,
-                              partitioner=partitioner, **params)
+                              partitioner=partitioner, **_push_kwargs(),
+                              **params)
     assert iters >= 1
     assert spec.matches(got, ref), (
         f"{name}/{gname}/{strategy}/{partitioner}: max deviation "
@@ -59,7 +56,7 @@ def test_cross_strategy_equivalence(name, gname, strategy, partitioner):
 
 
 def test_partitioner_registry_matches_sweep():
-    assert sorted(PARTITIONERS) == sorted(partitioner_names())
+    assert sorted(ALL_PARTITIONERS) == sorted(partitioner_names())
 
 
 def test_registry_contents():

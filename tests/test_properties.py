@@ -11,6 +11,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import graph as G  # noqa: E402
+from repro.core import partitioners as PT  # noqa: E402
 from repro.core import (components_oracle, from_edges,  # noqa: E402
                         labelprop_serial)
 from repro.kernels import ops, ref  # noqa: E402
@@ -70,6 +71,39 @@ def test_sortdest_layout_is_dest_sorted(ne):
         sel = pg.sd_edge_valid[c] == 1
         d = pg.sd_dst_global[c][sel]
         assert np.all(np.diff(d) >= 0), "edges must be sorted by destination"
+
+
+# -- relabel composition (deterministic twins live in test_replan.py) --------
+
+
+def _random_plan(rng, n, C):
+    """An arbitrary-but-valid PartitionPlan: any permutation, any nonnegative
+    chunk split summing to n (empty chunks included)."""
+    order = rng.permutation(n).astype(np.int64)
+    cuts = np.sort(rng.integers(0, n + 1, size=C - 1))
+    counts = np.diff(np.concatenate(([0], cuts, [n]))).astype(np.int64)
+    return PT.PartitionPlan(C, order, counts)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 60), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_plan_composition_properties(n, C, seed):
+    """compose/rebase/padded_map_from over arbitrary plans: rebase inverts
+    compose, the padded map equals g2l_B applied on top of l2g_A, and a
+    composed plan's relabel still round-trips."""
+    rng = np.random.default_rng(seed)
+    A = _random_plan(rng, n, C)
+    B = _random_plan(rng, n, C)
+    D = B.rebase(A)
+    assert A.compose(D).same_as(B)
+    m = B.padded_map_from(A)
+    g2l_a, l2g_a = A.relabel()
+    g2l_b, _ = B.relabel()
+    live = l2g_a >= 0
+    assert np.array_equal(m[live], g2l_b[l2g_a[live]])
+    assert (m[~live] == -1).all()
+    g2l, l2g = A.compose(D).relabel()
+    assert np.array_equal(l2g[g2l], np.arange(n))
 
 
 # -- label propagation -------------------------------------------------------
