@@ -11,6 +11,8 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
   imbalance.* per-chare load skew + padding waste per partitioner policy
   wire.*     analytic per-device wire bytes on the production mesh
+  grid.*     2-D grid partitioning: per-rectangle skew + two-phase-reduce
+             wire bytes vs the best 1-D variant (also in BENCH_cost.json)
   kernel.*   push-kernel validation + timing + staged/fused TPU cost model
   dispatch.* what push_fn='auto' chose per layout (fused on the power-law
              stand-in, staged on a near-uniform contrast graph)
@@ -98,6 +100,25 @@ def main():
     # ---- wire model --------------------------------------------------------
     for g, variant, pes, bytes_ in tables.wire_table(scale_log2=scale):
         emit(f"wire.{g}.{variant}@{pes}", f"{bytes_:.3e}", "bytes/device/iter")
+
+    # ---- 2-D grid partitioning (rectangle skew + two-phase-reduce wire) ----
+    grid_json = {}
+    for g, pname, pes, m in tables.grid_table(scale_log2=scale):
+        st = m["stats"]
+        emit(f"grid.{g}.{pname}@{pes}.imbalance",
+             f"{st['edge_imbalance']:.3f}",
+             f"max_e={st['max_edges']} mean_e={st['mean_edges']:.0f} "
+             f"edge_pad={st['edge_padding_waste']:.2f}")
+        emit(f"grid.{g}.{pname}@{pes}.wire", f"{m['wire']:.3e}",
+             f"basic_1d={m['wire_basic_1d']:.3e} "
+             f"best_1d={m['wire_best_1d']:.3e}")
+        grid_json.setdefault(g, {})[f"{pname}@{pes}"] = {
+            "edge_imbalance": st["edge_imbalance"],
+            "wire_bytes": m["wire"],
+            "wire_basic_1d": m["wire_basic_1d"],
+            "wire_best_1d": m["wire_best_1d"],
+        }
+    cost_json["grid"] = grid_json
 
     # ---- kernels -----------------------------------------------------------
     err_staged = kernelbench.validate(fused=False)

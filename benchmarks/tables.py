@@ -89,6 +89,43 @@ def wire_table(scale_log2: int = 13, pe_counts=(16, 64, 128, 256),
     return rows
 
 
+def grid_table(scale_log2: int = 13, shapes=((2, 4), (4, 2))):
+    """2-D grid placement (DESIGN.md section 10): per-rectangle load skew
+    plus the two-phase-reduce wire model, compared against the cheapest 1-D
+    variant at the same PE count.
+
+    -> list of (graph, grid-name, pes, metrics-dict) with keys
+    ``stats`` (``partition_stats`` on the rectangle decomposition),
+    ``wire`` (grid2d bytes/device/iter), ``wire_basic_1d`` (best 1-D
+    *basic*-variant bytes -- the other edge-traffic strategy), and
+    ``wire_best_1d`` (best bytes over every 1-D strategy x partitioner).
+    Host-side prep only, so full grids are cheap to sweep.
+    """
+    rows = []
+    for paper_name, (dskey, *_rest) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=scale_log2)
+        one_d_cache = {}
+
+        def one_d(pes):
+            if pes not in one_d_cache:
+                one_d_cache[pes] = [wire_model(g, pes, partitioner=p)
+                                    for p in partitioner_names()]
+            return one_d_cache[pes]
+
+        for rr, cc in shapes:
+            pes = rr * cc
+            pname = f"grid({rr},{cc})"
+            rows.append((paper_name, pname, pes, {
+                "stats": partition_stats(
+                    partition(g, pes, partitioner=pname)),
+                "wire": wire_model(g, pes, partitioner=pname)["grid2d"],
+                "wire_basic_1d": min(m["basic"] for m in one_d(pes)),
+                "wire_best_1d": min(b for m in one_d(pes)
+                                    for b in m.values()),
+            }))
+    return rows
+
+
 def imbalance_table(scale_log2: int = 13, pe_counts=(8,), partitioners=None):
     """Per-chare load skew per placement policy -- the paper's imbalance
     observation as a measurable table.

@@ -23,13 +23,17 @@ def main():
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--algorithm", nargs="+",
                     choices=registered_names() + ["all"], default=["all"])
-    ap.add_argument("--partitioners", nargs="+",
-                    choices=partitioner_names() + ["all"],
-                    default=["contiguous"],
-                    help="placement policies to sweep (see DESIGN.md sec. 7)")
+    ap.add_argument("--partitioners", nargs="+", default=["contiguous"],
+                    help="placement policies to sweep: any registered 1-D "
+                         "name, 'grid(R,C)' (runs only at R*C PEs; DESIGN.md "
+                         "sec. 10), or 'all' for the 1-D registry")
     args = ap.parse_args()
     parts = (partitioner_names() if "all" in args.partitioners
              else args.partitioners)
+    from repro.core import get_partitioner
+
+    for p in parts:
+        get_partitioner(p)  # fail fast on typos (grid names parse here)
 
     algos = registered_names() if "all" in args.algorithm else args.algorithm
     for paper_name, (dskey, V, E, pr_s, lp_s) in GRAPHS.items():

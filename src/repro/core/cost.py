@@ -71,15 +71,30 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
     max_pes = len(jax.devices())
     pe_counts = [p for p in pe_counts if p <= max_pes]
 
+    from repro.core.partitioners import grid_shape
+
     spec = prog_mod.get_spec(algorithm)
     params = {**spec.defaults, **algo_params}
     serial = _time(lambda: spec.serial(graph, **params), repeats)
 
     parallel, dispatch = {}, {}
+    cells = {}  # (partitioner) -> strategies swept for the verdict below
     for partitioner in partitioners:
-        for pes in pe_counts:
+        # a grid(R,C) cell runs only at its own PE count (one shard per
+        # rectangle) and only the two-phase-reduce strategy -- every 1-D
+        # strategy name would resolve to the same grid2d engine anyway.  A
+        # grid whose R*C is not in the (device-clamped) sweep is skipped
+        # entirely: an unmeasured cell must not surface as a COST verdict.
+        shape = grid_shape(partitioner)
+        cell_pes = (pe_counts if shape is None
+                    else [p for p in pe_counts if p == shape[0] * shape[1]])
+        cell_strategies = strategies if shape is None else ("grid2d",)
+        if shape is not None and not cell_pes:
+            continue
+        cells[partitioner] = cell_strategies
+        for pes in cell_pes:
             pg = partition(graph, pes, partitioner=partitioner)
-            for strategy in strategies:
+            for strategy in cell_strategies:
                 eng = Engine(pg, strategy=strategy)
                 dispatch[(partitioner, strategy, pes)] = eng.dispatch
                 run = lambda: eng.run(algorithm, **params)
@@ -87,8 +102,8 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
                 parallel[(partitioner, strategy, pes)] = _time(run, repeats)
 
     cost = {}
-    for partitioner in partitioners:
-        for strategy in strategies:
+    for partitioner, cell_strategies in cells.items():
+        for strategy in cell_strategies:
             beats = [p for p in pe_counts
                      if parallel.get((partitioner, strategy, p), np.inf)
                      <= serial]
@@ -112,10 +127,32 @@ def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4,
     V' is the *padded* vertex count P*K and Emax the heaviest chare's edge
     count -- both depend on the partitioner, so placement skew (the paper's
     load-imbalance observation) shows up directly in the wire bytes.
+
+    A ``grid(R,C)`` partitioner yields the 2-D two-phase-reduce entry
+    instead (DESIGN.md section 10).  Phase 1 is wire-free -- each rectangle's
+    edges are resident, so unlike ``basic`` nothing edge-proportional ever
+    moves.  Phase 2 ring-reduces the per-rectangle partials down each grid
+    column and redistributes each row chunk from its column owners:
+
+        grid2d: 2*min(Kc, Dmax)*b*(R-1)/R  +  Kr*b*(C-1)/C
+
+    where Kc/Kr are the padded column/row chunk heights and Dmax the
+    heaviest rectangle's edge count (a rectangle cannot touch more distinct
+    destinations than it has edges -- the O(E/P) cap on the combine
+    payload).  Both terms are vertex-sized O(V*(1/R + 1/C)) = O(V/sqrt(P))
+    on square grids: the Ammar-Ozsu scalability factor the 1-D cut-edge
+    variants lack.
     """
-    from repro.core.partitioners import make_plan
+    from repro.core.partitioners import GridPlan, make_plan
 
     plan = make_plan(graph, num_pes, partitioner)
+    if isinstance(plan, GridPlan):
+        R, C = plan.rows, plan.cols
+        d_max = int(plan.rect_counts.max()) if graph.num_edges else 0
+        combine = 2 * min(plan.col_chunk_size, d_max) * value_bytes \
+            * (R - 1) / max(R, 1)
+        redistribute = plan.chunk_size * value_bytes * (C - 1) / max(C, 1)
+        return {"grid2d": combine + redistribute}
     Pn = num_pes
     Vp = Pn * plan.chunk_size  # padded vertices (== V for perfect balance)
     e_max = int(plan.edges_per_chunk(graph).max()) if graph.num_edges else 0

@@ -33,6 +33,7 @@ Two adaptive layers ride on top (DESIGN.md section 9):
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -98,6 +99,12 @@ class Engine:
     layout from the measured band occupancy, recorded in ``self.dispatch``),
     ``None`` (explicit staged jnp pipeline), or a callable hook
     (``ops.make_push_fn``, used as given).
+
+    The strategy follows the partition's dimensionality: a ``grid(R,C)``
+    partition always runs the ``grid2d`` two-phase reduce (the 1-D layouts
+    do not exist on it), and the constructor's 1-D ``strategy`` is kept as
+    the fallback a mid-run replan to a 1-D placement rebinds to.  Asking for
+    ``grid2d`` on a 1-D partition is an error.
     """
 
     pg: PartitionedGraph
@@ -111,6 +118,9 @@ class Engine:
         if self.strategy not in strat.STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {sorted(strat.STRATEGIES)}")
+        if self.strategy == "grid2d" and not self.pg.is_grid:
+            raise ValueError("strategy 'grid2d' needs a grid(R,C) partition "
+                             f"(got partitioner {self.pg.partitioner!r})")
         if self.mesh is None:
             self.mesh = make_pe_mesh(self.pg.num_chunks)
         if self.pg.num_chunks != self.mesh.devices.size:
@@ -119,13 +129,20 @@ class Engine:
             raise ValueError(
                 f"push_fn must be 'auto', None, or a callable hook "
                 f"(ops.make_push_fn), got {self.push_fn!r}")
+        # the 1-D strategy a replan back to a 1-D placement falls back to
+        self._strategy_request = (self.strategy if self.strategy != "grid2d"
+                                  else "sortdest")
         self._push_request = self.push_fn
         self._bind(self.pg)
 
     def _bind(self, pg: PartitionedGraph):
         """Point the engine at a partition: alias its device-upload cache,
-        re-resolve the adaptive dispatch, start a fresh compile cache."""
+        re-resolve the active strategy and adaptive dispatch, start a fresh
+        compile cache."""
         self.pg = pg
+        # the strategy tracks the partition's dimensionality: rectangles run
+        # the two-phase reduce, 1-D placements the requested variant
+        self.strategy = "grid2d" if pg.is_grid else self._strategy_request
         # layouts are uploaded once per PartitionedGraph and shared: engines
         # built on the same partition (a strategy sweep) alias the same
         # device buffers instead of re-transferring them per Engine; only
@@ -137,7 +154,14 @@ class Engine:
             self.arrays = self.pg.device_arrays(
                 strat.STRATEGY_LAYOUT[self.strategy])
         self.aux = self.pg.device_aux()
-        self._fn = strat.STRATEGIES[self.strategy]
+        if pg.is_grid:
+            rows, cols = pg.grid_shape
+            # the static grid meta rides in via partial: strategies share one
+            # positional signature and only grid2d needs the column geometry
+            self._fn = functools.partial(
+                strat.grid2d, grid_meta=(rows, cols, pg.col_chunk_size))
+        else:
+            self._fn = strat.STRATEGIES[self.strategy]
         self._C, self._K = self.pg.num_chunks, self.pg.chunk_size
         self.dispatch = self._resolve_dispatch()
         self._compiled = {}  # program.key -> jitted fn; timing must not
@@ -177,10 +201,16 @@ class Engine:
             self.push_fn = None
             return {"choice": "staged", "mode": "auto",
                     "reason": "basic strategy has no push loop to fuse"}
-        band = self.pg.sd_band if layout == "sd" else self.pg.band
+        if layout == "grid":
+            # rectangle phase-1 push: gather side is the row-chunk state,
+            # scatter side the column-padded destination space
+            band = self.pg.gr_band
+            scatter = self.pg.grid_shape[1] * self.pg.col_chunk_size
+        else:
+            band = self.pg.sd_band if layout == "sd" else self.pg.band
+            scatter = self._C * self._K
         emax = self.pg.edge_valid.shape[1]
-        choice, occ = blocks.choose_push(band, emax, self._K,
-                                         self._C * self._K)
+        choice, occ = blocks.choose_push(band, emax, self._K, scatter)
         if choice == "fused" and jax.default_backend() == "tpu":
             from repro.kernels import ops
 
@@ -329,17 +359,42 @@ class Engine:
         of plan A's ``l2g`` (the composed relabel,
         ``PartitionPlan.padded_map_from``) scatters live slots; padding gets
         the program's own init fill, so min-monoid programs stay bit-exact.
-        The frontier rides along (new padding enters quiesced)."""
-        move = new_pg.plan.padded_map_from(self.pg.plan)
+        The frontier rides along (new padding enters quiesced).
+
+        1-D <-> 2-D switches compose through the same algebra on the ROW
+        maps (``partitioners.row_plan_of``): a grid's state is its row plan
+        replicated per column, so the move reads the old column-0 replica,
+        scatters through the composed row relabel, and re-replicates into
+        the new shape -- for 1-D <-> 1-D the replica count is 1 on both
+        sides and this is exactly the original move.
+        """
+        move = part_mod.row_plan_of(new_pg.plan).padded_map_from(
+            part_mod.row_plan_of(self.pg.plan))
         live = move >= 0
-        old_flat = np.asarray(jax.device_get(state)).reshape(-1)
-        new_state = np.asarray(program.init(new_pg)).reshape(-1).copy()
+        old_cols = self.pg.grid_shape[1] if self.pg.is_grid else 1
+        new_cols = new_pg.grid_shape[1] if new_pg.is_grid else 1
+        old_rows = self.pg.num_chunks // old_cols
+        new_rows = new_pg.num_chunks // new_cols
+        k_old, k_new = self.pg.chunk_size, new_pg.chunk_size
+
+        def row_view(a, dtype):
+            """Column-0 replica of a [P, K] plane, flattened to row space."""
+            return np.asarray(a, dtype).reshape(
+                old_rows, old_cols, k_old)[:, 0].reshape(-1)
+
+        def replicate(a):
+            """Row-space plane -> the new partition's replicated [P, K]."""
+            return np.repeat(a.reshape(new_rows, 1, k_new), new_cols,
+                             axis=1).reshape(new_pg.num_chunks, k_new)
+
+        old_flat = row_view(jax.device_get(state), None)
+        new_state = np.asarray(program.init(new_pg)).reshape(
+            new_rows, new_cols, k_new)[:, 0].reshape(-1).copy()
         new_state[move[live]] = old_flat[live]
-        new_f = np.zeros(new_pg.num_chunks * new_pg.chunk_size, np.int32)
-        new_f[move[live]] = frontier_host.reshape(-1)[live]
-        shape = (new_pg.num_chunks, new_pg.chunk_size)
-        return (jnp.asarray(new_state.reshape(shape)),
-                jnp.asarray(new_f.reshape(shape).astype(np.int32)))
+        new_f = np.zeros(new_rows * k_new, np.int32)
+        new_f[move[live]] = row_view(frontier_host, np.int32)[live]
+        return (jnp.asarray(replicate(new_state)),
+                jnp.asarray(replicate(new_f).astype(np.int32)))
 
     def _should_replan(self, policy, frontier_host) -> bool:
         if policy.mode == "always":
@@ -351,6 +406,15 @@ class Engine:
         """Segmented superstep driver with mid-run repartitioning."""
         if isinstance(policy, str):
             policy = ReplanPolicy(partitioner=policy)
+        # fail at run() entry, not hundreds of supersteps later when the
+        # skew trigger first fires: the target must name a known policy, and
+        # a grid must preserve the chare count (one mesh shard per rectangle)
+        part_mod.get_partitioner(policy.partitioner)
+        shape = part_mod.grid_shape(policy.partitioner)
+        if shape is not None and shape[0] * shape[1] != self._C:
+            raise ValueError(
+                f"replan target {policy.partitioner!r} needs "
+                f"{shape[0] * shape[1]} chares, engine has {self._C}")
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
         state = jnp.asarray(program.init(self.pg))

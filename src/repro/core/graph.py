@@ -10,9 +10,13 @@ layer (``repro.core.partitioners``): ``partition(graph, C, partitioner=...)``
 obtains a ``PartitionPlan`` (vertex permutation + chunk bounds), relabels every
 edge into the permuted "padded id" space, and records the global<->local
 relabel arrays the engine uses to keep original vertex ids at the API boundary
-(see DESIGN.md "Partitioning").  All layout builds are vectorized
-(argsort/bincount bucketing) -- no per-chunk Python loops -- so graph prep
-scales to the larger RMAT sizes.
+(see DESIGN.md "Partitioning").  A ``grid(R,C)`` partitioner yields a
+``GridPlan`` instead and the decomposition becomes 2-D: one chare per *edge
+rectangle* (src-row-chunk x dst-col-chunk), vertex state row-replicated, and
+a single column-space edge layout for the two-phase reduce (DESIGN.md
+section 10).  All layout builds are vectorized (argsort/bincount bucketing)
+-- no per-chunk Python loops -- so graph prep scales to the larger RMAT
+sizes.
 
 Real datasets from the paper (soc-LiveJournal1, twitter_rv, uk-2007-05) are not
 available offline; the registry provides *scaled synthetic stand-ins* with the
@@ -178,6 +182,19 @@ class PartitionedGraph:
     forces both layouts up front (its callers expect a fully built
     decomposition); ``repartition`` leaves them lazy, so a mid-run replan
     pays only for the one layout its strategy actually reads.
+
+    2-D grid partitions (``GridPlan`` placements, DESIGN.md section 10)
+    reuse the same container with "chare" meaning "edge rectangle": one
+    shard per rectangle ``(r, c)`` of an R x C grid, per-vertex planes
+    row-replicated (shard ``r*C + c`` carries row chunk r's state), and a
+    single demand-materialized ``grid`` edge layout in place of
+    basic/sortdest:
+      * ``gr_src_local``  [R*C, Emax] row-local source index of each edge
+      * ``gr_dst_col``    [R*C, Emax] *column-padded* destination id
+      * ``gr_edge_valid`` / ``gr_edge_weight`` aligned planes
+      * ``gr_band``       [R*C, 4, NB] band table (same radix build)
+      * ``gr_row_to_col`` [R*C, K] row slot -> column-padded id (-1 padding),
+        the gather map that brings column-combined results back to row state
     """
 
     graph: Graph
@@ -205,10 +222,31 @@ class PartitionedGraph:
     # weight sums), shared with every ``repartition`` of this graph so a
     # replan re-runs only the relabel + radix re-sort + pack
     _prep: object = dataclasses.field(default=None, repr=False, compare=False)
+    # grid-only metadata (_GridMeta: shape, column geometry, row->col map);
+    # None for 1-D placements
+    _grid: object = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def padded_vertices(self) -> int:
         return self.num_chunks * self.chunk_size
+
+    # -- 2-D grid views ------------------------------------------------------
+
+    @property
+    def is_grid(self) -> bool:
+        return self._grid is not None
+
+    @property
+    def grid_shape(self) -> tuple | None:
+        """(rows, cols) for grid partitions, None for 1-D placements."""
+        return (self._grid.rows, self._grid.cols) if self.is_grid else None
+
+    @property
+    def col_chunk_size(self) -> int:
+        """Padded height of one destination (column) chunk."""
+        if not self.is_grid:
+            raise ValueError("col_chunk_size is a grid-partition property")
+        return self._grid.col_chunk_size
 
     def chunk_of(self, v: np.ndarray) -> np.ndarray:
         """Owning chunk of a *padded* id (use ``global_to_local`` first for
@@ -220,27 +258,35 @@ class PartitionedGraph:
     def _layout(self, which: str) -> tuple:
         """Build-or-fetch one edge layout: the bounded radix sort into the
         (owner, tile-bucket) order, the rectangle pack, and the band table.
-        Both layouts share ``_base`` (relabeled endpoints, owner split, tile
-        ids), so a replan that only reads one order skips the other's sort
-        and pack entirely."""
+        All layouts share ``_base`` (relabeled endpoints, owner split, tile
+        ids), so a replan that only reads one order skips the others' sorts
+        and packs entirely.  1-D placements expose ``basic``/``sd``; grid
+        placements expose the single ``grid`` layout (owners are edge
+        rectangles, destinations column-padded ids)."""
         if which not in self._lazy:
+            if self.is_grid != (which == "grid"):
+                raise ValueError(
+                    f"layout {which!r} unavailable: "
+                    + ("grid partitions expose only the 'grid' layout"
+                       if self.is_grid else
+                       "the 'grid' layout needs a grid(R,C) partition"))
             b = self._base
-            C, K = self.num_chunks, self.chunk_size
-            nsb = -(-K // blocks.BLOCK_V)
-            nseg = -(-self.padded_vertices // blocks.BLOCK_S)
-            key_bound = C * nsb * nseg
+            C = self.num_chunks
+            key_bound = C * b.nsb * b.nseg
             key_dtype = INT if key_bound <= 1 << 31 else np.int64
             owner_k = b.owner.astype(key_dtype)
             if which == "basic":
                 # source block outermost (permuted CSR order, block-granular)
-                key = (owner_k * nsb + b.src_blk) * nseg + b.seg_blk
+                key = (owner_k * b.nsb + b.src_blk) * b.nseg + b.seg_blk
             else:
                 # destination segment block outermost (the paper's
-                # dest-sorted send order, block-granular)
-                key = (owner_k * nseg + b.seg_blk) * nsb + b.src_blk
+                # dest-sorted send order, block-granular; the grid layout
+                # scatters into its narrow column block, so the same order
+                # keeps its bands tight)
+                key = (owner_k * b.nseg + b.seg_blk) * b.nsb + b.src_blk
             order = _stable_argsort_bounded(key, key_bound)
-            s, d, w = _pack_edges(order, b.src, b.dst, b.wgt, b.owner,
-                                  b.per_chunk_e, C, K, b.emax)
+            s, d, w = _pack_edges(order, b.src_local, b.dst, b.wgt, b.owner,
+                                  b.per_chunk_e, C, b.emax)
             band = blocks.edge_bands_grouped(b.src_blk[order],
                                              b.seg_blk[order],
                                              b.per_chunk_e, b.emax)
@@ -284,21 +330,72 @@ class PartitionedGraph:
         # one mask serves both layouts: row c has per_chunk_e[c] valid edges
         return self.edge_valid
 
+    # -- grid (rectangle) layout accessors ----------------------------------
+
+    @property
+    def gr_src_local(self) -> np.ndarray:
+        return self._layout("grid")[0]
+
+    @property
+    def gr_dst_col(self) -> np.ndarray:
+        return self._layout("grid")[1]
+
+    @property
+    def gr_edge_weight(self) -> np.ndarray:
+        return self._layout("grid")[2]
+
+    @property
+    def gr_band(self) -> np.ndarray:
+        return self._layout("grid")[3]
+
+    @property
+    def gr_edge_valid(self) -> np.ndarray:
+        # rectangle k has per_rect_e[k] valid edges in any order
+        return self.edge_valid
+
+    @property
+    def gr_row_to_col(self) -> np.ndarray:
+        """[R*C, K] row slot -> column-padded id of the same vertex (-1 at
+        padding): the post-column-combine gather back into row state."""
+        if not self.is_grid:
+            raise ValueError("gr_row_to_col is a grid-partition property")
+        return self._grid.row_to_col
+
+    @property
+    def rect_degree(self) -> np.ndarray:
+        """[R*C, K] out-edges each row slot has IN each rectangle (a vertex's
+        out-degree split across its row's rectangles by destination column);
+        the per-rectangle frontier-load table ``partition_stats`` charges."""
+        if not self.is_grid:
+            raise ValueError("rect_degree is a grid-partition property")
+        if "rect_degree" not in self._lazy:
+            b = self._base
+            P, K = self.num_chunks, self.chunk_size
+            flat = b.owner.astype(np.int64) * K + b.src_local
+            self._lazy["rect_degree"] = np.bincount(
+                flat, minlength=P * K).astype(np.int64).reshape(P, K)
+        return self._lazy["rect_degree"]
+
     def device_arrays(self, layout: str = "both") -> dict:
         """Device-resident dense layout arrays (edge order + band metadata),
         uploaded once per partition and shared by every Engine built on it.
 
-        ``layout`` is ``"basic"``, ``"sd"``, or ``"both"``: engines ask for
-        their strategy's layout only (``strategies.STRATEGY_LAYOUT``), so a
-        replan uploads -- and materializes -- just what it will run.
+        ``layout`` is ``"basic"``, ``"sd"``, ``"grid"``, or ``"both"``:
+        engines ask for their strategy's layout only
+        (``strategies.STRATEGY_LAYOUT``), so a replan uploads -- and
+        materializes -- just what it will run.
         """
         if layout == "both":
+            if self.is_grid:
+                return self.device_arrays("grid")
             return {**self.device_arrays("basic"), **self.device_arrays("sd")}
         names = {
             "basic": ("src_local", "dst_global", "edge_valid", "edge_weight",
                       "band"),
             "sd": ("sd_src_local", "sd_dst_global", "sd_edge_valid",
                    "sd_edge_weight", "sd_band"),
+            "grid": ("gr_src_local", "gr_dst_col", "gr_edge_valid",
+                     "gr_edge_weight", "gr_band", "gr_row_to_col"),
         }[layout]
         key = f"dense:{layout}"
         if key not in self._dev:
@@ -378,17 +475,19 @@ def _stable_argsort_bounded(keys: np.ndarray, bound: int) -> np.ndarray:
     return np.argsort(keys, kind="stable")
 
 
-def _pack_edges(order_idx, src, dst, wgt, owner, per_chunk_e, num_chunks,
-                chunk_size, emax):
+def _pack_edges(order_idx, src_local, dst, wgt, owner, per_chunk_e,
+                num_chunks, emax):
     """Scatter owner-grouped edges into the padded [C, Emax] rectangle.
 
     ``order_idx`` must list edges with owners grouped (nondecreasing); the
     slot of an edge within its row is its rank among same-owner edges, so one
-    global sort replaces the seed's per-chunk ``flatnonzero`` loop.  The
-    validity mask is not built here -- it depends only on ``per_chunk_e``
-    (identical for every edge order), so ``partition`` builds it once.
+    global sort replaces the seed's per-chunk ``flatnonzero`` loop.
+    ``src_local`` is already owner-local (a row-local index for grid
+    rectangles, a chare-local one for 1-D layouts).  The validity mask is
+    not built here -- it depends only on ``per_chunk_e`` (identical for
+    every edge order), so the materializer builds it once.
     """
-    so, do = src[order_idx], dst[order_idx]
+    so, do = src_local[order_idx], dst[order_idx]
     ow = owner[order_idx]
     starts = np.zeros(num_chunks, dtype=np.int64)
     np.cumsum(per_chunk_e[:-1], out=starts[1:])
@@ -399,7 +498,7 @@ def _pack_edges(order_idx, src, dst, wgt, owner, per_chunk_e, num_chunks,
     s = np.zeros((num_chunks, emax), dtype=INT)
     d = np.zeros((num_chunks, emax), dtype=INT)
     w = np.ones((num_chunks, emax), dtype=WEIGHT)
-    s.ravel()[flat] = so - ow * chunk_size
+    s.ravel()[flat] = so
     d.ravel()[flat] = do
     w.ravel()[flat] = wgt[order_idx]
     return s, d, w
@@ -442,22 +541,40 @@ def partition(graph: Graph, num_chunks: int,
 
 @dataclasses.dataclass(frozen=True)
 class _EdgeBase:
-    """Relabeled-edge base shared by both layout builds of one partition:
-    padded-id endpoints, owner split, and the kernel-tile ids the sort keys
-    and band tables are made of (DESIGN.md section 8).  Both layouts order a
-    chare's edges by coarse tile bucket so the fused kernels' gather/scatter
-    bands stay narrow; the bucket count is small enough
-    (C * K/BLOCK_V * V'/BLOCK_S) that graphs up to scale ~18 take a single
-    int16 radix pass per layout."""
+    """Relabeled-edge base shared by the layout builds of one partition:
+    owner-local sources, scatter-space destinations, the owner split, and
+    the kernel-tile ids the sort keys and band tables are made of (DESIGN.md
+    section 8).  Every layout orders an owner's edges by coarse tile bucket
+    so the fused kernels' gather/scatter bands stay narrow; the bucket count
+    is small enough (C * K/BLOCK_V * S/BLOCK_S) that graphs up to scale ~18
+    take a single int16 radix pass per layout.
 
-    src: np.ndarray  # [E] int32 padded-id sources
-    dst: np.ndarray  # [E] int32 padded-id destinations
+    For 1-D placements the owner is the source's chare and ``dst`` a padded
+    vertex id; for grid placements the owner is the edge's *rectangle* and
+    ``dst`` a column-padded id (DESIGN.md section 10) -- the sort, pack, and
+    band machinery is identical.
+    """
+
+    src_local: np.ndarray  # [E] int32 owner-local sources
+    dst: np.ndarray  # [E] int32 scatter-space destinations
     wgt: np.ndarray  # [E] float32
-    owner: np.ndarray  # [E] owning chunk of each edge's source
+    owner: np.ndarray  # [E] owning chunk/rectangle of each edge
     per_chunk_e: np.ndarray  # [C]
     emax: int
     src_blk: np.ndarray  # [E] gather-side tile id (local source / BLOCK_V)
-    seg_blk: np.ndarray  # [E] scatter-side tile id (padded dest / BLOCK_S)
+    seg_blk: np.ndarray  # [E] scatter-side tile id (scatter dest / BLOCK_S)
+    nsb: int  # gather-side tile count per owner
+    nseg: int  # scatter-side tile count
+
+
+@dataclasses.dataclass(frozen=True)
+class _GridMeta:
+    """Grid-only metadata riding on ``PartitionedGraph._grid``."""
+
+    rows: int
+    cols: int
+    col_chunk_size: int
+    row_to_col: np.ndarray  # [R*C, K] int32, -1 at padding
 
 
 def _materialize(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
@@ -467,7 +584,10 @@ def _materialize(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
     ``eager`` forces both edge layouts (``partition``'s contract: a fully
     built decomposition); ``repartition`` passes ``eager=False`` so a replan
     materializes only the layout its engine strategy reads, on demand.
+    ``GridPlan`` placements route to ``_materialize_grid``.
     """
+    if isinstance(plan, part_mod.GridPlan):
+        return _materialize_grid(graph, plan, partitioner, prep, eager)
     num_chunks = plan.num_chunks
     chunk_size = plan.chunk_size
     padded = num_chunks * chunk_size
@@ -492,9 +612,12 @@ def _materialize(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
     emax = max(int(per_chunk_e.max()) if len(src) else 1, 1)
     # one validity mask serves both layouts: row c has per_chunk_e[c] edges
     edge_valid = (np.arange(emax) < per_chunk_e[:, None]).astype(INT)
-    base = _EdgeBase(src, dst, prep.wgt, owner, per_chunk_e, emax,
-                     src_blk=(src - owner * chunk_size) // blocks.BLOCK_V,
-                     seg_blk=dst // blocks.BLOCK_S)
+    src_local = src - owner * chunk_size
+    base = _EdgeBase(src_local, dst, prep.wgt, owner, per_chunk_e, emax,
+                     src_blk=src_local // blocks.BLOCK_V,
+                     seg_blk=dst // blocks.BLOCK_S,
+                     nsb=-(-chunk_size // blocks.BLOCK_V),
+                     nseg=-(-padded // blocks.BLOCK_S))
 
     pg = PartitionedGraph(
         graph=graph,
@@ -517,6 +640,79 @@ def _materialize(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
     return pg
 
 
+def _materialize_grid(graph: Graph, plan, partitioner: str, prep: _EdgePrep,
+                      eager: bool = True) -> PartitionedGraph:
+    """Build the rectangle decomposition for one ``GridPlan``.
+
+    One shard per rectangle ``(r, c)``; the per-vertex planes (state width,
+    degrees, validity) are the ROW layout replicated across each row's C
+    rectangles, destinations are relabeled into the COLUMN-padded space the
+    two-phase reduce combines over, and the edge layout orders each
+    rectangle's edges by (segment block, source block) through the same
+    int16-radix pass as the 1-D layouts (DESIGN.md section 10).
+    """
+    R, C = plan.rows, plan.cols
+    P = R * C
+    Kr, Kc = plan.chunk_size, plan.col_chunk_size
+    row_g2l, row_l2g = plan.row.relabel()  # [V], [R*Kr]
+    col_g2l, col_l2g = plan.col.relabel()  # [V], [C*Kc]
+
+    # state relabel: the row layout replicated across each row's rectangles;
+    # g2l names the column-0 replica (engines read results from it), l2g
+    # names every replica (so source seeding and id-valued inits hit all C)
+    rrow = row_g2l // Kr
+    g2l = rrow * C * Kr + (row_g2l - rrow * Kr)
+    l2g = np.repeat(row_l2g.reshape(R, Kr), C, axis=0).reshape(-1)
+
+    live = row_l2g >= 0
+    deg = np.ones(R * Kr, dtype=INT)
+    deg[live] = np.maximum(prep.out_degrees[row_l2g[live]], 1)
+    out_weight = np.ones(R * Kr, dtype=WEIGHT)
+    out_weight[live] = np.where(prep.wsum[row_l2g[live]] > 0,
+                                prep.wsum[row_l2g[live]], 1.0)
+    rep = lambda a: np.repeat(a.reshape(R, Kr), C, axis=0)
+
+    # row slot -> column-padded id of the same vertex: the gather map that
+    # brings the column-combined vector back into (replicated) row state
+    row_to_col = np.full(R * Kr, -1, dtype=INT)
+    row_to_col[live] = col_g2l[row_l2g[live]].astype(INT)
+
+    # relabel edges: row-local gather index, column-padded scatter id,
+    # owning rectangle
+    src_row = row_g2l.astype(INT)[prep.src]
+    src_local = src_row % Kr
+    dst_col = col_g2l.astype(INT)[prep.dst]
+    owner = blocks.edge_rectangles(src_row // Kr, dst_col // Kc, C)
+    per_rect_e = np.bincount(owner, minlength=P)
+    emax = max(int(per_rect_e.max()) if len(src_local) else 1, 1)
+    edge_valid = (np.arange(emax) < per_rect_e[:, None]).astype(INT)
+    base = _EdgeBase(src_local, dst_col, prep.wgt, owner, per_rect_e, emax,
+                     src_blk=src_local // blocks.BLOCK_V,
+                     seg_blk=dst_col // blocks.BLOCK_S,
+                     nsb=-(-Kr // blocks.BLOCK_V),
+                     nseg=-(-(C * Kc) // blocks.BLOCK_S))
+
+    pg = PartitionedGraph(
+        graph=graph,
+        num_chunks=P,
+        chunk_size=Kr,
+        vertex_valid=rep(live.astype(INT)),
+        out_degree=rep(deg),
+        out_weight=rep(out_weight),
+        edge_valid=edge_valid,
+        partitioner=partitioner,
+        global_to_local=g2l,
+        local_to_global=l2g,
+        plan=plan,
+        _base=base,
+        _prep=prep,
+        _grid=_GridMeta(R, C, Kc, rep(row_to_col)),
+    )
+    if eager:
+        pg._layout("grid")
+    return pg
+
+
 @dataclasses.dataclass(frozen=True)
 class PairwiseLayout:
     """Edge layout for the *basic* variant: per (source chunk, dest chunk)
@@ -536,6 +732,9 @@ class PairwiseLayout:
 def build_pairwise(pg: PartitionedGraph) -> PairwiseLayout:
     """Bucket edges by (source chunk, dest chunk), vectorized: one stable
     argsort over flattened bucket ids replaces the seed's O(C^2) scan loop."""
+    if pg.is_grid:
+        raise ValueError("pairwise layout is 1-D only; grid partitions "
+                         "already bucket edges by rectangle")
     prep = pg._prep if pg._prep is not None else _edge_prep(pg.graph)
     g2l32 = pg.global_to_local.astype(INT)
     src = g2l32[prep.src]

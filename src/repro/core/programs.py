@@ -141,14 +141,19 @@ def _f32(x):
 
 def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None):
     """[C, K] state filled with ``fill``; ``source`` (an *original* vertex id,
-    translated through the partitioner's relabel) set to 0."""
-    s = np.full((pg.num_chunks, pg.chunk_size), fill, dtype=dtype)
+    translated through the partitioner's relabel) set to 0.
+
+    Seeds through ``local_to_global`` rather than the single ``g2l`` slot:
+    grid partitions replicate a vertex's state across their C rectangles
+    (DESIGN.md section 10), and every replica must carry the seed.  For 1-D
+    placements exactly one slot matches, as before.
+    """
+    s = np.full(pg.num_chunks * pg.chunk_size, fill, dtype=dtype)
     if source is not None:
         if not 0 <= source < pg.graph.num_vertices:
             raise ValueError(f"source {source} out of range")
-        pos = int(pg.global_to_local[source])
-        s[pos // pg.chunk_size, pos % pg.chunk_size] = 0
-    return s
+        s[pg.local_to_global == source] = 0
+    return s.reshape(pg.num_chunks, pg.chunk_size)
 
 
 # ---------------------------------------------------------------------------

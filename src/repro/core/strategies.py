@@ -17,6 +17,9 @@ happens and what goes on the wire*:
              one hop per step, overlappable          (paper: P^2 shared buffers)
   atomic     single-shard scatter-add/min            (paper: shared buffer +
              (no cross-chip analogue on TPU)          atomics; shared-mem only)
+  grid2d     per-rectangle partials + column
+             combine (2-D edge partitioning:         (CombBLAS/PowerGraph-
+             edge data never goes on the wire)        style, DESIGN.md #10)
 
 All functions run *inside* ``shard_map`` over axis ``"pe"``.
 """
@@ -236,11 +239,51 @@ def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     return jax.lax.fori_loop(0, num_chunks - 1, hop, init)
 
 
+def grid2d(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+           edge_value=None, push_fn=None, edge_semiring=None, grid_meta=None):
+    """Two-phase reduce over a 2-D edge grid (DESIGN.md section 10).
+
+    One shard per rectangle ``(r, c)`` of an R x C grid; ``vals`` is the
+    shard's (replicated) row-chunk state.  Phase 1 is purely local: the
+    rectangle's edges -- already resident on the shard -- run the same
+    gather/transform/segment-combine pipeline as the 1-D strategies
+    (fused/staged push over the rectangle's narrow ``gr_band``), producing
+    partial contributions in the COLUMN-padded destination space.  Phase 2
+    is the column combine: a monoid reduction of the per-rectangle partials
+    along each grid column.  Expressed under SPMD as one full-axis
+    ``psum``/``pmin`` of the ``[C*Kc]`` buffer -- rectangles outside a
+    vertex's column contribute only the identity, so the full-axis combine
+    IS the per-column segment reduce, fused with the row broadcast that
+    gets every replica its next state.  Unlike every 1-D variant, nothing
+    edge-proportional ever goes on the wire: the payload is vertex-sized
+    (see ``cost.wire_model``'s grid terms).
+
+    ``grid_meta`` is the static (rows, cols, col_chunk_size) triple the
+    engine binds via ``functools.partial``.
+    """
+    R, C, Kc = grid_meta
+    dense = _dense_contrib(vals, pg_arrays["gr_src_local"],
+                           pg_arrays["gr_dst_col"], pg_arrays["gr_edge_valid"],
+                           pg_arrays["gr_edge_weight"], combiner, C, Kc,
+                           segment_fn, edge_value, push_fn,
+                           pg_arrays["gr_band"], edge_semiring)
+    if combiner.name == "add":
+        full = jax.lax.psum(dense, AXIS)
+    else:
+        full = jax.lax.pmin(dense, AXIS)
+    # gather the combined column-space vector back into row-state order;
+    # padding slots (-1) get the identity, keeping quiesced padding inert
+    m = pg_arrays["gr_row_to_col"]
+    return jnp.where(m >= 0, full[jnp.clip(m, 0)],
+                     jnp.asarray(combiner.identity, dense.dtype))
+
+
 STRATEGIES = {
     "reduction": reduction,
     "sortdest": sortdest,
     "basic": basic,
     "pairs": pairs,
+    "grid2d": grid2d,
 }
 
 # Strategies that read the pairwise (edge-bucketed) layout instead of the CSR.
@@ -254,4 +297,5 @@ STRATEGY_LAYOUT = {
     "sortdest": "sd",
     "pairs": "sd",
     "basic": "pairwise",
+    "grid2d": "grid",
 }

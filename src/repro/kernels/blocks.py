@@ -17,6 +17,12 @@ narrow -- a few blocks instead of V/BLOCK_V (gather) or S/BLOCK_S (scatter) --
 and the fused kernel's two ``fori_loop``s visit only the in-band tiles.
 Empty edge blocks (all padding) get ``lo=0, hi=-1`` so both loops run zero
 iterations.
+
+The same machinery covers 2-D grid partitions (DESIGN.md section 10): the
+grouping key generalizes from "owning chare" to "owning edge *rectangle*"
+(``edge_rectangles``), ``edge_bands_grouped`` then yields ``[R*C, 4, NB]``
+band tables with no rectangle-specific code, and ``rect_bounds`` gives the
+per-rectangle edge slices that tile ``[0, E)``.
 """
 
 from __future__ import annotations
@@ -96,6 +102,26 @@ def edge_bands_grouped(src_blk: np.ndarray, seg_blk: np.ndarray,
     band[rows, 2, blkid] = np.minimum.reduceat(seg_blk, bounds)
     band[rows, 3, blkid] = np.maximum.reduceat(seg_blk, bounds)
     return band
+
+
+def edge_rectangles(row_of_src: np.ndarray, col_of_dst: np.ndarray,
+                    cols: int) -> np.ndarray:
+    """[E] flat rectangle id of each edge on an ``R x cols`` grid.
+
+    Rectangle ``(r, c)`` has flat id ``r*cols + c`` -- the row-major order
+    the engine's shard axis uses (one shard per rectangle), chosen so that a
+    grid column is the strided set ``c, c+cols, ...`` and a grid row is the
+    contiguous run ``r*cols .. r*cols+cols-1``.
+    """
+    return row_of_src.astype(np.int64) * cols + col_of_dst
+
+
+def rect_bounds(rect_counts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """-> (starts, ends) of each rectangle's slice in the rectangle-sorted
+    edge order; the half-open slices tile ``[0, E)`` exactly."""
+    ends = np.cumsum(rect_counts, dtype=np.int64)
+    starts = np.concatenate(([0], ends[:-1]))
+    return starts, ends
 
 
 def band_tiles(band: np.ndarray) -> int:

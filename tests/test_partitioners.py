@@ -111,6 +111,51 @@ def test_edge_balanced_reduces_max_chare_edges():
         assert balanced["edge_imbalance"] < contig["edge_imbalance"]
 
 
+def test_edge_balanced_cuts_on_weight_when_weighted():
+    """Satellite (ROADMAP): weighted graphs cut on cumulative edge WEIGHT.
+    One heavy edge outweighs many unit edges, so the weighted split isolates
+    its source while the unweighted split would not."""
+    # vertex 0: one edge of weight 90; vertices 1..8: one unit edge each
+    src = np.arange(9, dtype=np.int32)
+    dst = (np.arange(9, dtype=np.int32) + 1) % 10
+    w = np.array([90.0] + [1.0] * 8, np.float32)
+    gw = G.from_edges(10, src, dst, weight=w)
+    plan = PT.make_plan(gw, 2, "edge_balanced")
+    # half the total weight (49.5) is passed inside vertex 0's edges alone
+    assert plan.chunk_counts.tolist() == [1, 9]
+    # the unweighted twin balances edge COUNTS instead
+    plan_u = PT.make_plan(G.from_edges(10, src, dst), 2, "edge_balanced")
+    assert plan_u.chunk_counts.tolist()[0] > 1
+    # equal weights reproduce the degree-based cuts exactly
+    g = G.rmat(6, 300, seed=2)
+    uniform = g.with_weight(np.full(g.num_edges, 2.5, np.float32))
+    assert PT.make_plan(uniform, 3, "edge_balanced").same_as(
+        PT.make_plan(g, 3, "edge_balanced"))
+    # all-zero weights fall back to degree balancing (no 0/0 cuts)
+    zeros = g.with_weight(np.zeros(g.num_edges, np.float32))
+    assert PT.make_plan(zeros, 3, "edge_balanced").same_as(
+        PT.make_plan(g, 3, "edge_balanced"))
+
+
+@pytest.mark.parametrize("gname", sorted(DEGENERATE_GRAPHS))
+def test_weighted_edge_balanced_degenerate_partitions(gname):
+    """Weighted cuts survive the degenerate shapes (no edges, isolated
+    vertices, V % P != 0, empty chunks) and still yield valid plans whose
+    engine results match the serial reference."""
+    from repro.core import programs as P
+
+    g = graph(gname)
+    gw = G.random_weights(g, seed=7)
+    for chunks in (1, 2, 3, 5):
+        plan = PT.make_plan(gw, chunks, "edge_balanced")
+        assert int(plan.chunk_counts.sum()) == gw.num_vertices
+        assert (plan.chunk_counts >= 0).all()
+    ref, _ = P.sssp_serial(gw, source=0)
+    got, _ = run_parallel(gw, "sssp", num_pes=1, strategy="sortdest",
+                          partitioner="edge_balanced", source=0)
+    assert np.array_equal(got, ref), gname
+
+
 def test_partition_stats_fields():
     pg = G.partition(G.ring(8), 4, partitioner="striped")
     st = PT.partition_stats(pg)

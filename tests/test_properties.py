@@ -14,7 +14,7 @@ from repro.core import graph as G  # noqa: E402
 from repro.core import partitioners as PT  # noqa: E402
 from repro.core import (components_oracle, from_edges,  # noqa: E402
                         labelprop_serial)
-from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels import blocks, ops, ref  # noqa: E402
 from repro import optim as O  # noqa: E402
 
 import jax.numpy as jnp  # noqa: E402
@@ -104,6 +104,45 @@ def test_plan_composition_properties(n, C, seed):
     assert (m[~live] == -1).all()
     g2l, l2g = A.compose(D).relabel()
     assert np.array_equal(l2g[g2l], np.arange(n))
+
+
+# -- 2-D grid plans (deterministic twins live in test_grid.py) ---------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_strategy(), st.integers(1, 3), st.integers(1, 3))
+def test_grid_plan_invariants_property(ne, rows, cols):
+    """Every edge lands in exactly one rectangle, the rectangle bounds tile
+    [0, E), and the row/col maps round-trip through relabel()."""
+    n, edges = ne
+    src = np.array([e[0] for e in edges], dtype=np.int32)
+    dst = np.array([e[1] for e in edges], dtype=np.int32)
+    g = G.from_edges(n, src, dst)
+    plan = PT.make_plan(g, rows * cols, f"grid({rows},{cols})")
+    rect = plan.row.vertex_chunk[g.src] * cols + plan.col.vertex_chunk[g.dst]
+    assert np.array_equal(np.bincount(rect, minlength=rows * cols),
+                          plan.rect_counts)
+    assert int(plan.rect_counts.sum()) == g.num_edges
+    starts, ends = blocks.rect_bounds(plan.rect_counts)
+    assert starts[0] == 0 and int(ends[-1]) == g.num_edges
+    assert np.array_equal(starts[1:], ends[:-1])
+    for axis in (plan.row, plan.col):
+        g2l, l2g = axis.relabel()
+        assert np.array_equal(l2g[g2l], np.arange(n))
+        pad = np.ones(axis.num_chunks * axis.chunk_size, bool)
+        pad[g2l] = False
+        assert (l2g[pad] == -1).all()
+    # the materialized rectangle layout preserves the edge multiset
+    pg = G.partition(g, rows * cols, partitioner=f"grid({rows},{cols})")
+    _, row_l2g = plan.row.relabel()
+    _, col_l2g = plan.col.relabel()
+    rec = []
+    for k in range(pg.num_chunks):
+        sel = pg.gr_edge_valid[k] == 1
+        gs = row_l2g[(k // cols) * pg.chunk_size + pg.gr_src_local[k][sel]]
+        rec.extend(zip(gs.tolist(),
+                       col_l2g[pg.gr_dst_col[k][sel]].tolist()))
+    assert sorted(rec) == sorted(zip(g.src.tolist(), g.dst.tolist()))
 
 
 # -- label propagation -------------------------------------------------------
