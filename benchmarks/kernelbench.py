@@ -121,6 +121,55 @@ def layout_cost_model(pg, layout="sd"):
     return cm
 
 
+def batched_cost_model(pg, B, layout="sd", weighted=False):
+    """Analytic TPU throughput of the batched [*, B] plane vs a per-query
+    loop (DESIGN.md section 11): the acceptance model behind the >=4x
+    queries/sec criterion.
+
+    One batched superstep streams the edge layout (indices, weights, band
+    table) ONCE for all B query columns -- edge-stream tiles per query drop
+    B-fold -- while the vertex-state bytes and the combine flops scale with
+    B (each visited tile's one-hot matmul widens to [BLOCK_E, BLOCK] @
+    [BLOCK, B]; modeled conservatively as flops x B even though B <= 16
+    rides in one MXU pass).  The sequential baseline pays the full edge
+    stream B times.
+
+        t(b) = max((edge_bytes + vert_bytes*b) / HBM_BW,
+                   tiles * tile_flops * b / MXU_FLOPS)
+        speedup = t(1) / (t(B) / B)
+
+    On the scale-13 stand-in the single-query sweep is memory-bound on the
+    edge stream, so batching moves it toward the compute roofline and the
+    per-query time collapses.
+    """
+    band = pg.sd_band if layout == "sd" else pg.band
+    E, V, S = (pg.edge_valid.shape[1], pg.chunk_size,
+               pg.num_chunks * pg.chunk_size)
+    chares = pg.num_chunks
+    ne = num_edge_blocks(E)
+    tiles = band_tiles(np.asarray(band))
+    tile_flops = 2 * BLOCK_E * BLOCK_V
+    edge_bytes = chares * E * 4 * (4 if weighted else 3) + chares * ne * 4 * 4
+    vert_bytes = chares * (V + S) * 4
+
+    def t(b):
+        hbm = (edge_bytes + vert_bytes * b) / 819e9
+        mxu = tiles * tile_flops * b / 197e12
+        return max(hbm, mxu)
+
+    seq_s, batched_s = t(1), t(B) / B
+    return {
+        "B": B,
+        "tiles_per_query_seq": tiles,
+        "tiles_per_query_batched": tiles / B,
+        "seq_s_per_query": seq_s,
+        "batched_s_per_query": batched_s,
+        "queries_per_sec_seq": 1.0 / seq_s,
+        "queries_per_sec_batched": 1.0 / batched_s,
+        "speedup": seq_s / batched_s,
+    }
+
+
 def validate(E=4096, V=2048, seed=1, fused=True):
     """Max |err| of one push path vs the pure-jnp oracle (CI smoke)."""
     rng = np.random.default_rng(seed)

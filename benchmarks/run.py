@@ -11,6 +11,11 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   fig12.*    dataflow ("GraphX") stand-in vs serial (paper Figures 1-2)
   imbalance.* per-chare load skew + padding waste per partitioner policy
   wire.*     analytic per-device wire bytes on the production mesh
+  wire_batch.* B-sweep of the wire model: bytes/query as value payloads
+             amortize the fixed edge-layout side (batched plane)
+  throughput.* batched multi-query serving: measured queries/sec (batched
+             [*, B] plane vs per-query loop at a fixed superstep budget)
+             plus the TPU amortization model (also in BENCH_cost.json)
   grid.*     2-D grid partitioning: per-rectangle skew + two-phase-reduce
              wire bytes vs the best 1-D variant (also in BENCH_cost.json)
   kernel.*   push-kernel validation + timing + staged/fused TPU cost model
@@ -101,6 +106,12 @@ def main():
     for g, variant, pes, bytes_ in tables.wire_table(scale_log2=scale):
         emit(f"wire.{g}.{variant}@{pes}", f"{bytes_:.3e}", "bytes/device/iter")
 
+    # ---- batched wire model (B-sweep of the value payloads) ----------------
+    for g, variant, B, bytes_, per_q in tables.wire_batch_table(
+            scale_log2=scale):
+        emit(f"wire_batch.{g}.{variant}@B{B}", f"{bytes_:.3e}",
+             f"{per_q:.3e} bytes/query")
+
     # ---- 2-D grid partitioning (rectangle skew + two-phase-reduce wire) ----
     grid_json = {}
     for g, pname, pes, m in tables.grid_table(scale_log2=scale):
@@ -153,6 +164,21 @@ def main():
              f"max_occ={d['max_occupancy']:.3f} "
              f"tiles_fused={d['tiles_fused']} tiles_staged={d['tiles_staged']}")
     cost_json["adaptive_dispatch"] = adaptive
+
+    # ---- batched multi-query throughput (DESIGN.md section 11) -------------
+    bm = kernelbench.batched_cost_model(pg, 16)
+    emit("throughput.model.speedup@B16", f"{bm['speedup']:.2f}",
+         f"tiles/query {bm['tiles_per_query_seq']} -> "
+         f"{bm['tiles_per_query_batched']:.0f}")
+    tp = tables.throughput_table(scale_log2=scale, repeats=repeats)
+    emit(f"throughput.{tp['graph']}.{tp['algo']}.batched@B{tp['B']}",
+         f"{tp['qps_batched']:.2f}", "queries/s")
+    emit(f"throughput.{tp['graph']}.{tp['algo']}.seq_loop@B{tp['B']}",
+         f"{tp['qps_seq']:.2f}", "queries/s")
+    emit(f"throughput.{tp['graph']}.{tp['algo']}.measured_speedup",
+         f"{tp['measured_speedup']:.2f}",
+         f"budget={tp['superstep_budget']} supersteps")
+    cost_json["throughput"] = {**tp, "model": bm}
 
     kernels_json = {
         "schema": 1,

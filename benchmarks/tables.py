@@ -89,6 +89,63 @@ def wire_table(scale_log2: int = 13, pe_counts=(16, 64, 128, 256),
     return rows
 
 
+def throughput_table(scale_log2: int = 13, algo: str = "bfs", B: int = 16,
+                     budget: int = 8, repeats: int = 3,
+                     dskey: str = "soc-lj1-mini") -> dict:
+    """Measured multi-query throughput: one batched [*, B] sweep vs a
+    sequential per-query loop, at a fixed superstep budget (DESIGN.md
+    section 11).  The sequential loop also goes through ``run_batch`` at
+    B=1 so both sides reuse ONE compiled program (a plain ``Engine.run``
+    would retrace per source -- the seed lives in the program key there).
+
+    -> dict with queries/sec both ways and the measured amortization ratio
+    (tracked in BENCH_cost.json's ``throughput`` section).
+    """
+    import numpy as np
+
+    spec = get_spec(algo)
+    g = load_dataset(dskey, scale_log2=scale_log2, weighted=spec.weighted)
+    g = spec.prepare_graph(g)
+    eng = Engine(partition(g, 1))
+    rng = np.random.default_rng(0)
+    sources = [int(s) for s in rng.integers(0, g.num_vertices, B)]
+
+    run_batched = lambda: eng.run_batch(algo, sources=sources, batch=B,
+                                        max_iters=budget)
+    run_batched()  # compile outside the timed region
+    t_batched = bench(run_batched, repeats)
+    run_seq = lambda: [eng.run_batch(algo, sources=[s], batch=1,
+                                     max_iters=budget) for s in sources]
+    run_seq()
+    t_seq = bench(run_seq, repeats)
+    return {
+        "graph": dskey, "algo": algo, "B": B, "superstep_budget": budget,
+        "batched_s": t_batched, "seq_s": t_seq,
+        "qps_batched": B / t_batched, "qps_seq": B / t_seq,
+        "measured_speedup": t_seq / t_batched,
+    }
+
+
+def wire_batch_table(scale_log2: int = 13, pes: int = 64,
+                     batches=(1, 4, 16), partitioner: str = "contiguous"):
+    """B-sweep of the analytic wire model: how per-query wire bytes shrink
+    as value payloads amortize the fixed edge-layout side (only ``basic``
+    has a per-edge index term; the combined-buffer variants scale linearly
+    and amortize nothing on the wire -- the amortization win is in the HBM
+    edge stream, not the ICI payload; see ``kernelbench.batched_cost_model``).
+
+    -> list of (graph, variant, B, bytes/device/iter, bytes/query).
+    """
+    rows = []
+    for paper_name, (dskey, *_rest) in GRAPHS.items():
+        g = load_dataset(dskey, scale_log2=scale_log2)
+        for B in batches:
+            for variant, bytes_ in wire_model(
+                    g, pes, partitioner=partitioner, batch=B).items():
+                rows.append((paper_name, variant, B, bytes_, bytes_ / B))
+    return rows
+
+
 def grid_table(scale_log2: int = 13, shapes=((2, 4), (4, 2))):
     """2-D grid placement (DESIGN.md section 10): per-rectangle load skew
     plus the two-phase-reduce wire model, compared against the cheapest 1-D

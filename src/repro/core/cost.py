@@ -116,13 +116,20 @@ def run_cost(graph: Graph, algorithm: str = "pagerank",
 # ---------------------------------------------------------------------------
 
 def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4,
-               partitioner: str = "contiguous") -> dict:
+               partitioner: str = "contiguous", batch: int = 1) -> dict:
     """Bytes on the ICI wire per device per iteration, by variant.
 
     reduction: ring all-reduce of a dense |V'| buffer      ~2*V'*b
     sortdest:  reduce-scatter of locally-combined buffer   ~V'*b
     basic:     all_to_all of (dst,val) pairs, no combining ~2*Emax*2*b
     pairs:     (P-1) ring hops of one chunk block          ~V'*b
+
+    ``batch`` models the [*, B] multi-query plane (DESIGN.md section 11):
+    every VALUE payload -- state buffers, combined contributions, pair
+    values -- carries B columns and scales linearly, but the edge-layout
+    side stays fixed (``basic``'s per-pair destination index is shared by
+    all B values of that edge, and grid/band layouts never move at all), so
+    per-query wire bytes shrink toward the value-only floor as B grows.
 
     V' is the *padded* vertex count P*K and Emax the heaviest chare's edge
     count -- both depend on the partitioner, so placement skew (the paper's
@@ -146,19 +153,22 @@ def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4,
     from repro.core.partitioners import GridPlan, make_plan
 
     plan = make_plan(graph, num_pes, partitioner)
+    B = max(int(batch), 1)
     if isinstance(plan, GridPlan):
         R, C = plan.rows, plan.cols
         d_max = int(plan.rect_counts.max()) if graph.num_edges else 0
-        combine = 2 * min(plan.col_chunk_size, d_max) * value_bytes \
+        combine = 2 * min(plan.col_chunk_size, d_max) * value_bytes * B \
             * (R - 1) / max(R, 1)
-        redistribute = plan.chunk_size * value_bytes * (C - 1) / max(C, 1)
+        redistribute = plan.chunk_size * value_bytes * B * (C - 1) / max(C, 1)
         return {"grid2d": combine + redistribute}
     Pn = num_pes
     Vp = Pn * plan.chunk_size  # padded vertices (== V for perfect balance)
     e_max = int(plan.edges_per_chunk(graph).max()) if graph.num_edges else 0
     return {
-        "reduction": 2 * Vp * value_bytes * (Pn - 1) / max(Pn, 1),
-        "sortdest": Vp * value_bytes * (Pn - 1) / max(Pn, 1),
-        "pairs": Vp * value_bytes * (Pn - 1) / max(Pn, 1),
-        "basic": 2 * e_max * 2 * value_bytes,
+        "reduction": 2 * Vp * value_bytes * B * (Pn - 1) / max(Pn, 1),
+        "sortdest": Vp * value_bytes * B * (Pn - 1) / max(Pn, 1),
+        "pairs": Vp * value_bytes * B * (Pn - 1) / max(Pn, 1),
+        # per-pair payload: one shared dst index + B values (the index side
+        # does not scale with the batch); B=1 reproduces 2*Emax*2*b
+        "basic": 2 * e_max * value_bytes * (1 + B),
     }

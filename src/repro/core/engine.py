@@ -64,6 +64,15 @@ def make_pe_mesh(num_pes: int):
                             axis_types=compat.auto_axes(1))
 
 
+@jax.jit
+def _relabel_gather(init_rows, old_rows, src, tgt):
+    """The composed-relabel state move as one on-device gather/scatter:
+    ``tgt`` slots (unique by construction -- a relabel is a bijection on
+    live vertices) receive the ``src`` slots of the old plane; everything
+    else keeps the caller-built init fill."""
+    return init_rows.at[tgt].set(old_rows[src])
+
+
 @dataclasses.dataclass
 class ReplanPolicy:
     """When and how ``Engine.run`` re-partitions mid-run (DESIGN.md sec. 9).
@@ -354,12 +363,214 @@ class Engine:
                                  bound)
         return state, frontier, int(jax.device_get(it)[0, 0])
 
-    def _move_state(self, program, state, frontier_host, new_pg):
-        """Carry checkpointed state across a replan: plan B's ``g2l`` on top
-        of plan A's ``l2g`` (the composed relabel,
-        ``PartitionPlan.padded_map_from``) scatters live slots; padding gets
-        the program's own init fill, so min-monoid programs stay bit-exact.
-        The frontier rides along (new padding enters quiesced).
+    # -- batched multi-query execution (DESIGN.md section 11) ----------------
+
+    def _smap_batch(self, body):
+        """shard_map wrapper for the batched plane: state/frontier are
+        [C, K, B] (chare-sharded on the leading axis, batch trailing), the
+        step bound [C, 1], outputs (state, frontier, per-query iters)."""
+        arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
+                     for k, v in self.arrays.items()}
+        aux_specs = {k: P(AXIS, None) for k in self.aux}
+        return compat.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(arr_specs, aux_specs, P(AXIS, None, None),
+                      P(AXIS, None, None), P(AXIS, None)),
+            out_specs=(P(AXIS, None, None), P(AXIS, None, None),
+                       P(AXIS, None)),
+            check_vma=False)
+
+    def _make_batch_body(self, program):
+        """The superstep loop over a [K, B] query plane, with PER-QUERY
+        convergence masking and iteration counting.
+
+        One edge sweep serves all B columns (the strategies and kernels are
+        rank-polymorphic over the trailing axis).  A query whose column
+        stopped changing sends the combiner identity forever after (its
+        frontier column is all-zero), so finished queries stop contributing
+        work, and ``q_it`` counts -- per query -- exactly the supersteps a
+        sequential run of that query would have executed: ``active[b]`` is
+        monotone non-increasing (a quiesced min-monoid column can never
+        reactivate), and the global loop runs while any query is active, so
+        extra supersteps past a query's own convergence are no-ops for it.
+        """
+        comb = program.combiner
+        convergence = program.fixed_iters is None
+
+        def body(arrs, aux, s0, f0, nsteps):
+            arrs = {k: v[0] for k, v in arrs.items()}
+            # aux planes are per-vertex [K]; expose them as [K, 1] so the
+            # program's update/apply lambdas broadcast over the batch axis
+            aux = {k: v[0][:, None] for k, v in aux.items()}
+            sent = jnp.asarray(comb.identity, s0.dtype)
+            limit = nsteps[0, 0]
+            B = s0.shape[-1]
+
+            def active_of(frontier):
+                # per-query "did anything change last step", across chares
+                return jax.lax.psum(
+                    frontier.any(axis=0).astype(jnp.int32), AXIS) > 0
+
+            def cond(carry):
+                _, _, active, it, _ = carry
+                return jnp.logical_and(active.any(), it < limit)
+
+            def step(carry):
+                state, frontier, active, it, q_it = carry
+                if convergence:
+                    vals = jnp.where(frontier, program.update(state, aux),
+                                     sent)
+                else:
+                    vals = program.update(state, aux)
+                incoming = self._propagate(vals, arrs, comb,
+                                           program.edge_value,
+                                           program.edge_semiring)
+                new = program.apply(state, incoming, aux)
+                delta = new != state
+                changed = active_of(delta) if convergence \
+                    else jnp.ones((B,), bool)
+                return (new, delta, changed, it + 1,
+                        q_it + active.astype(jnp.int32))
+
+            active0 = active_of(f0[0] != 0) if convergence \
+                else jnp.ones((B,), bool)
+            state, frontier, _, it, q_it = jax.lax.while_loop(
+                cond, step,
+                (s0[0], f0[0] != 0, active0, jnp.asarray(0),
+                 jnp.zeros((B,), jnp.int32)))
+            return (state[None], frontier.astype(jnp.int32)[None],
+                    q_it[None])
+
+        return body
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """B-bucket: round the query count up to the next power of two so
+        steady-state traffic hits a handful of compiled shapes."""
+        return 1 << max(n - 1, 0).bit_length()
+
+    @staticmethod
+    def _batch_key(program, B: int) -> tuple:
+        """Compile-cache key for the batched plane: the program key minus
+        its seed params (seeds live in the STATE, not the traced program --
+        any source list of the same bucket reuses the compilation), plus
+        the B bucket."""
+        key = tuple(kv for kv in program.key
+                    if not (isinstance(kv, tuple)
+                            and kv[0] in ("source", "sources", "pivots")))
+        return key + (("batch", B),)
+
+    def _run_batch_segment(self, program, B, state, frontier, nsteps):
+        key = (self._batch_key(program, B), "segment")
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(self._smap_batch(self._make_batch_body(program)))
+            self._compiled[key] = fn
+        bound = jnp.full((self._C, 1), nsteps, jnp.int32)
+        state, frontier, q_it = fn(self.arrays, self.aux, state, frontier,
+                                   bound)
+        return state, frontier, np.asarray(jax.device_get(q_it))[0]
+
+    def _run_batch_replanned(self, program, B, padded_sets, state, frontier,
+                             policy):
+        """Batched twin of ``_run_replanned``: the skew trigger sees the
+        frontier collapsed over queries (a vertex is frontier-active if ANY
+        query still touches it), and the state move carries the whole
+        [*, K, B] plane through the on-device relabel gather."""
+        policy = self._resolve_replan_policy(policy)
+        limit = (program.fixed_iters if program.fixed_iters is not None
+                 else program.max_iters)
+        q_iters = np.zeros(B, np.int64)
+        done, replans = 0, 0
+        while done < limit:
+            state, frontier, q_it = self._run_batch_segment(
+                program, B, state, frontier, min(policy.every, limit - done))
+            q_iters += q_it
+            # the longest-still-active query is active for every executed
+            # superstep, so its count IS the segment's global step count
+            done += int(q_it.max())
+            f_host = np.asarray(jax.device_get(frontier))
+            if program.fixed_iters is None and not f_host.any():
+                break  # all queries quiesced
+            if done >= limit or replans >= policy.max_replans:
+                continue
+            f_any = f_host.any(axis=-1).astype(np.int32)
+            if not self._should_replan(policy, f_any):
+                continue
+            new_plan = part_mod.make_plan(self.pg.graph, self._C,
+                                          policy.partitioner)
+            if new_plan.same_as(self.pg.plan):
+                continue  # no-op switch: keep the resident layout
+            new_pg = self.pg.repartition(policy.partitioner, plan=new_plan)
+            init = program.init_batch(new_pg, padded_sets)
+            state, frontier = self._move_state(init, state, frontier, new_pg)
+            self._rebind(new_pg)
+            replans += 1
+        return state, q_iters
+
+    def run_batch(self, program, sources=None, batch=None, replan=None,
+                  **params) -> tuple[np.ndarray, np.ndarray]:
+        """Run B queries of one program in a single batched sweep.
+
+        ``sources`` is a sequence of queries -- each an original vertex id
+        or an iterable of ids (a seed set); defaults to the program's own
+        ``sources`` (betweenness pivots).  ``batch`` fixes the compiled
+        plane width B (>= the query count); by default the count is rounded
+        up to the next power of two (the B-bucket compile-cache policy).
+        Padding columns re-run query 0 and are dropped on the way out.
+
+        Returns ``(plane, iters)``: ``plane[i]`` is query i's converged
+        per-vertex state in original vertex order ([n, V]), ``iters[i]``
+        the supersteps query i needed (identical to its sequential count).
+        """
+        from repro.core import programs as prog_mod
+
+        if isinstance(program, str):
+            program = prog_mod.make_program(program, **params)
+        elif params:
+            raise TypeError("params only apply to registered program names")
+        if program.init_batch is None:
+            raise ValueError(
+                f"program {program.name!r} has no batched init "
+                f"(VertexProgram.init_batch); run it with Engine.run")
+        if sources is None:
+            sources = program.sources
+        sets = prog_mod.seed_sets(sources)
+        n = len(sets)
+        B = self._bucket(n) if batch is None else int(batch)
+        if B < n:
+            raise ValueError(f"batch={B} is smaller than {n} queries")
+        padded = sets + (sets[0],) * (B - n)
+        state = jnp.asarray(program.init_batch(self.pg, padded))
+        frontier = jnp.ones((self._C, self._K, B), jnp.int32)
+        limit = (program.fixed_iters if program.fixed_iters is not None
+                 else program.max_iters)
+        if replan is not None:
+            state, q_it = self._run_batch_replanned(program, B, padded,
+                                                    state, frontier, replan)
+        else:
+            state, _, q_it = self._run_batch_segment(program, B, state,
+                                                     frontier, limit)
+        # un-permute each query column to original vertex order (for grids,
+        # g2l points at the column-0 replica slots)
+        plane = np.asarray(jax.device_get(state)).reshape(
+            self._C * self._K, B)[self.pg.global_to_local]
+        return plane.T[:n].copy(), np.asarray(q_it[:n], np.int64)
+
+    def _move_state(self, init_state, state, frontier, new_pg):
+        """Carry state across a replan: plan B's ``g2l`` on top of plan A's
+        ``l2g`` (the composed relabel, ``PartitionPlan.padded_map_from``)
+        scatters live slots; padding gets the program's own init fill
+        (``init_state``, built by the caller for the new partition), so
+        min-monoid programs stay bit-exact.  The frontier rides along (new
+        padding enters quiesced).
+
+        The composed relabel is just a gather with unique targets, so the
+        state never round-trips through the host: only the (host-resident)
+        plan metadata decides ``src``/``tgt``; the state/frontier planes are
+        moved by one jitted ``.at[tgt].set(old[src])`` on device.  Planes
+        are shape-polymorphic: a trailing batch axis ([P, K, B]) rides
+        through unchanged.
 
         1-D <-> 2-D switches compose through the same algebra on the ROW
         maps (``partitioners.row_plan_of``): a grid's state is its row plan
@@ -371,30 +582,34 @@ class Engine:
         move = part_mod.row_plan_of(new_pg.plan).padded_map_from(
             part_mod.row_plan_of(self.pg.plan))
         live = move >= 0
+        src = jnp.asarray(np.nonzero(live)[0])
+        tgt = jnp.asarray(move[live])
         old_cols = self.pg.grid_shape[1] if self.pg.is_grid else 1
         new_cols = new_pg.grid_shape[1] if new_pg.is_grid else 1
         old_rows = self.pg.num_chunks // old_cols
         new_rows = new_pg.num_chunks // new_cols
         k_old, k_new = self.pg.chunk_size, new_pg.chunk_size
 
-        def row_view(a, dtype):
-            """Column-0 replica of a [P, K] plane, flattened to row space."""
-            return np.asarray(a, dtype).reshape(
-                old_rows, old_cols, k_old)[:, 0].reshape(-1)
+        def rows_of(a, n_rows, n_cols, k):
+            """Column-0 replica of a [P, K, ...] plane, flat in row space."""
+            a = a.reshape((n_rows, n_cols, k) + a.shape[2:])[:, 0]
+            return a.reshape((n_rows * k,) + a.shape[2:])
 
         def replicate(a):
-            """Row-space plane -> the new partition's replicated [P, K]."""
-            return np.repeat(a.reshape(new_rows, 1, k_new), new_cols,
-                             axis=1).reshape(new_pg.num_chunks, k_new)
+            """Row-space plane -> the new partition's replicated [P, K, ...]."""
+            tail = a.shape[1:]
+            a = a.reshape((new_rows, 1, k_new) + tail)
+            a = jnp.broadcast_to(a, (new_rows, new_cols, k_new) + tail)
+            return a.reshape((new_pg.num_chunks, k_new) + tail)
 
-        old_flat = row_view(jax.device_get(state), None)
-        new_state = np.asarray(program.init(new_pg)).reshape(
-            new_rows, new_cols, k_new)[:, 0].reshape(-1).copy()
-        new_state[move[live]] = old_flat[live]
-        new_f = np.zeros(new_rows * k_new, np.int32)
-        new_f[move[live]] = row_view(frontier_host, np.int32)[live]
-        return (jnp.asarray(replicate(new_state)),
-                jnp.asarray(replicate(new_f).astype(np.int32)))
+        init_rows = rows_of(jnp.asarray(init_state), new_rows, new_cols,
+                            k_new)
+        old_rows_flat = rows_of(state, old_rows, old_cols, k_old)
+        new_state = _relabel_gather(init_rows, old_rows_flat, src, tgt)
+        f_rows = rows_of(frontier, old_rows, old_cols, k_old)
+        f_init = jnp.zeros((new_rows * k_new,) + f_rows.shape[1:], jnp.int32)
+        new_f = _relabel_gather(f_init, f_rows.astype(jnp.int32), src, tgt)
+        return replicate(new_state), replicate(new_f)
 
     def _should_replan(self, policy, frontier_host) -> bool:
         if policy.mode == "always":
@@ -402,19 +617,24 @@ class Engine:
         stats = part_mod.partition_stats(self.pg, frontier=frontier_host)
         return stats["frontier_edge_imbalance"] > policy.threshold
 
-    def _run_replanned(self, program, policy) -> tuple[np.ndarray, int]:
-        """Segmented superstep driver with mid-run repartitioning."""
+    def _resolve_replan_policy(self, policy) -> ReplanPolicy:
+        """Validate a replan request at run() entry, not hundreds of
+        supersteps later when the skew trigger first fires: the target must
+        name a known policy, and a grid must preserve the chare count (one
+        mesh shard per rectangle)."""
         if isinstance(policy, str):
             policy = ReplanPolicy(partitioner=policy)
-        # fail at run() entry, not hundreds of supersteps later when the
-        # skew trigger first fires: the target must name a known policy, and
-        # a grid must preserve the chare count (one mesh shard per rectangle)
         part_mod.get_partitioner(policy.partitioner)
         shape = part_mod.grid_shape(policy.partitioner)
         if shape is not None and shape[0] * shape[1] != self._C:
             raise ValueError(
                 f"replan target {policy.partitioner!r} needs "
                 f"{shape[0] * shape[1]} chares, engine has {self._C}")
+        return policy
+
+    def _run_replanned(self, program, policy) -> tuple[np.ndarray, int]:
+        """Segmented superstep driver with mid-run repartitioning."""
+        policy = self._resolve_replan_policy(policy)
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
         state = jnp.asarray(program.init(self.pg))
@@ -436,8 +656,8 @@ class Engine:
             if new_plan.same_as(self.pg.plan):
                 continue  # no-op switch: keep the resident layout
             new_pg = self.pg.repartition(policy.partitioner, plan=new_plan)
-            state, frontier = self._move_state(program, state, f_host,
-                                               new_pg)
+            state, frontier = self._move_state(program.init(new_pg), state,
+                                               frontier, new_pg)
             self._rebind(new_pg)
             replans += 1
         final = np.asarray(jax.device_get(state)).reshape(-1)
@@ -459,6 +679,18 @@ class Engine:
             program = prog_mod.make_program(program, **params)
         elif params:
             raise TypeError("params only apply to registered program names")
+
+        if (program.sources is not None and program.init_batch is not None
+                and program.finalize is not None):
+            # inherently multi-source programs (betweenness pivots) run on
+            # the batched plane and post-process the per-query rows; the
+            # iteration count is the global superstep count (max over
+            # queries), matching what one batched sweep executes
+            sets = prog_mod.seed_sets(program.sources)
+            plane, q_it = self.run_batch(program, sources=program.sources,
+                                         replan=replan)
+            return (program.finalize(self.pg.graph, sets, plane),
+                    int(q_it.max()))
 
         if replan is not None:
             return self._run_replanned(program, replan)
@@ -501,3 +733,9 @@ class Engine:
                           ) -> np.ndarray:
         """Weight-normalized push PageRank."""
         return self.run("pagerank_weighted", alpha=alpha, iters=iters)[0]
+
+    def betweenness(self, pivots=(0, 1, 2, 3), max_iters: int = 10_000
+                    ) -> tuple[np.ndarray, int]:
+        """Approximate betweenness: batched multi-pivot BFS + Brandes."""
+        return self.run("betweenness", pivots=tuple(pivots),
+                        max_iters=max_iters)

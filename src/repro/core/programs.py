@@ -55,6 +55,18 @@ class VertexProgram:
     edge_semiring: str | None = None
     fixed_iters: int | None = None
     max_iters: int = 10_000
+    # --- batched multi-query extensions (DESIGN.md section 11) ---
+    # init_batch(pg, seed_sets) -> [C, K, B] state plane, one query column
+    # per seed set; programs without it cannot run under Engine.run_batch.
+    init_batch: Callable | None = None
+    # default seed list for programs that are *inherently* multi-source
+    # (betweenness pivots); Engine.run routes such programs through
+    # run_batch + finalize automatically.
+    sources: tuple | None = None
+    # finalize(graph, seed_sets, plane[n, V]) -> final result; host-side
+    # post-processing of the converged per-query planes (e.g. the Brandes
+    # accumulation turning BFS depths into centrality scores).
+    finalize: Callable | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,7 +151,30 @@ def _f32(x):
     return x.astype(jnp.float32)
 
 
-def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None):
+def seed_sets(sources) -> tuple[tuple[int, ...], ...]:
+    """Normalize a multi-query ``sources`` argument to a tuple of seed-id
+    tuples: each entry is either a single original vertex id or an iterable
+    of ids (a seed set); one query column per entry."""
+    if sources is None:
+        raise ValueError("run_batch needs sources (one per query)")
+    if isinstance(sources, (int, np.integer)):
+        sources = [sources]
+    sets = []
+    for s in sources:
+        if isinstance(s, (int, np.integer)):
+            sets.append((int(s),))
+        else:
+            t = tuple(int(v) for v in s)
+            if not t:
+                raise ValueError("empty seed set")
+            sets.append(t)
+    if not sets:
+        raise ValueError("sources is empty")
+    return tuple(sets)
+
+
+def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None,
+                 sources=None):
     """[C, K] state filled with ``fill``; ``source`` (an *original* vertex id,
     translated through the partitioner's relabel) set to 0.
 
@@ -147,8 +182,21 @@ def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None):
     grid partitions replicate a vertex's state across their C rectangles
     (DESIGN.md section 10), and every replica must carry the seed.  For 1-D
     placements exactly one slot matches, as before.
+
+    ``sources`` (a sequence of seed sets from ``seed_sets``) builds the
+    batched [C, K, B] plane instead: column b seeds query b's set.
     """
-    s = np.full(pg.num_chunks * pg.chunk_size, fill, dtype=dtype)
+    n = pg.num_chunks * pg.chunk_size
+    if sources is not None:
+        B = len(sources)
+        s = np.full((n, B), fill, dtype=dtype)
+        for b, seeds in enumerate(sources):
+            for v in seeds:
+                if not 0 <= v < pg.graph.num_vertices:
+                    raise ValueError(f"source {v} out of range")
+                s[pg.local_to_global == v, b] = 0
+        return s.reshape(pg.num_chunks, pg.chunk_size, B)
+    s = np.full(n, fill, dtype=dtype)
     if source is not None:
         if not 0 <= source < pg.graph.num_vertices:
             raise ValueError(f"source {source} out of range")
@@ -243,6 +291,8 @@ def _make_sssp(source: int = 0, max_iters: int = 10_000) -> VertexProgram:
         key=_cache_key("sssp", dict(source=source, max_iters=max_iters)),
         combiner=strat.FMIN,
         init=lambda pg: _index_state(pg, np.inf, np.float32, source),
+        init_batch=lambda pg, seeds: _index_state(pg, np.inf, np.float32,
+                                                  sources=seeds),
         update=lambda d, aux: d,
         edge_value=lambda v, w: v + w,
         edge_semiring="weight",
@@ -285,6 +335,8 @@ def _make_bfs(source: int = 0, max_iters: int = 10_000) -> VertexProgram:
         key=_cache_key("bfs", dict(source=source, max_iters=max_iters)),
         combiner=strat.MIN,
         init=lambda pg: _index_state(pg, INT_SENTINEL, np.int32, source),
+        init_batch=lambda pg, seeds: _index_state(pg, INT_SENTINEL, np.int32,
+                                                  sources=seeds),
         update=lambda d, aux: d,
         edge_value=_bfs_hop,  # +1 per hop, weights ignored
         edge_semiring="unit",
@@ -310,6 +362,79 @@ def bfs_serial(graph: Graph, source: int = 0, max_iters: int = 10_000
             return dist, it + 1
         dist = new
     return dist, max_iters
+
+
+# ---------------------------------------------------------------------------
+# Approximate betweenness: multi-source BFS on the batched plane + Brandes
+# accumulation at finalize (ROADMAP direction #5 riding on direction #1)
+# ---------------------------------------------------------------------------
+
+
+def _betweenness_from_depths(graph: Graph, sets, depths) -> np.ndarray:
+    """Brandes accumulation from per-pivot BFS depth rows (host, float64).
+
+    ``depths`` is the [n_pivots, V] plane the batched engine produces
+    (INT_SENTINEL = unreached).  For each pivot: forward sweep counts
+    shortest paths (sigma) level by level over the BFS DAG, backward sweep
+    accumulates dependencies (delta); scores are scaled by V / n_pivots to
+    estimate the all-sources sum (Brandes++ style pivot sampling).
+    """
+    src, dst = np.asarray(graph.src), np.asarray(graph.dst)
+    n = graph.num_vertices
+    depths = np.asarray(depths)
+    scores = np.zeros(n, np.float64)
+    for seeds, row in zip(sets, depths):
+        d = np.where(row >= INT_SENTINEL, -1, row).astype(np.int64)
+        maxlvl = int(d.max())
+        sigma = np.zeros(n, np.float64)
+        sigma[list(seeds)] = 1.0
+        for lvl in range(maxlvl):
+            dag = (d[src] == lvl) & (d[dst] == lvl + 1)
+            np.add.at(sigma, dst[dag], sigma[src[dag]])
+        delta = np.zeros(n, np.float64)
+        for lvl in range(maxlvl, 0, -1):
+            dag = (d[src] == lvl - 1) & (d[dst] == lvl)
+            with np.errstate(invalid="ignore", divide="ignore"):
+                ratio = np.where(sigma[dst] > 0, sigma[src] / sigma[dst], 0.0)
+            contrib = np.zeros(n, np.float64)
+            np.add.at(contrib, src[dag], (ratio * (1.0 + delta[dst]))[dag])
+            delta += contrib
+        delta[d == 0] = 0.0
+        scores += delta
+    return scores * (n / max(len(sets), 1))
+
+
+def _make_betweenness(pivots=(0, 1, 2, 3), max_iters: int = 10_000
+                      ) -> VertexProgram:
+    """Approximate betweenness centrality: B-pivot BFS in one batched sweep
+    (the [C, K, B] plane), then the Brandes forward/backward accumulation on
+    the host from the converged depth rows."""
+    pivots = tuple(int(p) for p in pivots)
+    return VertexProgram(
+        name="betweenness",
+        key=_cache_key("betweenness",
+                       dict(pivots=pivots, max_iters=max_iters)),
+        combiner=strat.MIN,
+        init=lambda pg: _index_state(pg, INT_SENTINEL, np.int32, pivots[0]),
+        init_batch=lambda pg, seeds: _index_state(pg, INT_SENTINEL, np.int32,
+                                                  sources=seeds),
+        update=lambda d, aux: d,
+        edge_value=_bfs_hop,
+        edge_semiring="unit",
+        apply=lambda d, inc, aux: jnp.minimum(d, inc),
+        fixed_iters=None,
+        max_iters=max_iters,
+        sources=pivots,
+        finalize=_betweenness_from_depths,
+    )
+
+
+def betweenness_serial(graph: Graph, pivots=(0, 1, 2, 3),
+                       max_iters: int = 10_000) -> tuple[np.ndarray, int]:
+    """Serial COST baseline: per-pivot Brandes in ``kernels.ref`` (its own
+    BFS -- fully independent of the engine's depth plane)."""
+    from repro.kernels.ref import betweenness_ref
+    return betweenness_ref(graph, tuple(int(p) for p in pivots))
 
 
 # ---------------------------------------------------------------------------
@@ -346,3 +471,7 @@ register(ProgramSpec(
     name="pagerank_weighted", make=_make_pagerank_weighted,
     serial=pagerank_weighted_serial, defaults=dict(alpha=0.85, iters=20),
     weighted=True, table="table6"))
+register(ProgramSpec(
+    name="betweenness", make=_make_betweenness, serial=betweenness_serial,
+    defaults=dict(pivots=(0, 1, 2, 3), max_iters=10_000),
+    returns_iters=True, table="table7"))

@@ -47,7 +47,10 @@ class Combiner:
     merge: Callable  # elementwise combine of two buffers
 
     def mask(self, data, valid):
-        return jnp.where(valid.astype(bool), data, self.identity)
+        # valid is per-edge; data may carry a trailing batch axis ([..., B])
+        v = valid.astype(bool)
+        v = v.reshape(v.shape + (1,) * (data.ndim - v.ndim))
+        return jnp.where(v, data, self.identity)
 
 
 ADD = Combiner(
@@ -78,6 +81,10 @@ def _edge_transform(vals_at_src, weights, edge_value):
     """
     if edge_value is None:
         return vals_at_src
+    if weights is not None and vals_at_src.ndim > weights.ndim:
+        # batched plane: per-edge weights broadcast over the query axis
+        weights = weights.reshape(
+            weights.shape + (1,) * (vals_at_src.ndim - weights.ndim))
     return edge_value(vals_at_src, weights)
 
 
@@ -174,7 +181,7 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
                            pg_arrays["sd_band"], edge_semiring)
     if combiner.name == "add":
         return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
-    blocks = dense.reshape(num_chunks, chunk_size)
+    blocks = dense.reshape((num_chunks, chunk_size) + dense.shape[1:])
     got = jax.lax.all_to_all(blocks, AXIS, split_axis=0, concat_axis=0, tiled=True)
     return jax.lax.reduce(got, jnp.asarray(combiner.identity, got.dtype),
                           combiner.merge, (0,))
@@ -203,8 +210,8 @@ def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     got_dst = jax.lax.all_to_all(dst_l, AXIS, 0, 0, tiled=True)
     got_valid = jax.lax.all_to_all(valid, AXIS, 0, 0, tiled=True)
     got_vals = combiner.mask(got_vals, got_valid)
-    return _segment(combiner, segment_fn, got_vals.ravel(), got_dst.ravel(),
-                    chunk_size)
+    flat = got_vals.reshape((-1,) + got_vals.shape[2:])  # keep any batch axis
+    return _segment(combiner, segment_fn, flat, got_dst.ravel(), chunk_size)
 
 
 def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
@@ -222,7 +229,7 @@ def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
                            pg_arrays["sd_edge_weight"], combiner, num_chunks,
                            chunk_size, segment_fn, edge_value, push_fn,
                            pg_arrays["sd_band"], edge_semiring)
-    blocks = dense.reshape(num_chunks, chunk_size)
+    blocks = dense.reshape((num_chunks, chunk_size) + dense.shape[1:])
     me = jax.lax.axis_index(AXIS)
     perm = [(k, (k + 1) % num_chunks) for k in range(num_chunks)]
 
@@ -274,7 +281,11 @@ def grid2d(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     # gather the combined column-space vector back into row-state order;
     # padding slots (-1) get the identity, keeping quiesced padding inert
     m = pg_arrays["gr_row_to_col"]
-    return jnp.where(m >= 0, full[jnp.clip(m, 0)],
+    gathered = full[jnp.clip(m, 0)]
+    live = m >= 0
+    if gathered.ndim > live.ndim:  # batched plane: mask broadcasts over B
+        live = live[:, None]
+    return jnp.where(live, gathered,
                      jnp.asarray(combiner.identity, dense.dtype))
 
 

@@ -34,7 +34,7 @@ def _pad_to(x, mult, fill):
     pad = (-n) % mult
     if pad == 0:
         return x
-    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
 
 
 def _sat_add(c, w):
@@ -101,6 +101,9 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
     """out[s] = combine_{e: dst[e]==s, valid[e]==1} edge_value(vals[src[e]]).
 
     The paper's per-chare hot loop; arbitrary (unpadded) shapes accepted.
+    ``vals`` may be ``[V]`` or a batched ``[V, B]`` query plane -- the fused
+    kernel streams the edge layout once for all B columns; the staged pair
+    (1-D kernels) falls back to a static per-column loop.
     ``weight`` (optional, per-edge) applies the semiring edge transform
     between the gather and scatter halves: ``c * w`` for the add monoid,
     saturating ``c + w`` for min -- the same ``edge_value`` hook the dense
@@ -137,8 +140,14 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
     else:
         if unit_weight and weight is None and combine == "min":
             weight = jnp.ones_like(valid)  # staged path streams the ones
-        out = _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p,
-                           combine, interpret)
+        if vals_p.ndim == 2:  # staged kernels are 1-D: static column loop
+            out = jnp.stack(
+                [_push_staged(vals_p[:, b], src_p, dst_p, valid_p, weight,
+                              nseg_p, combine, interpret)
+                 for b in range(vals_p.shape[1])], axis=-1)
+        else:
+            out = _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p,
+                               combine, interpret)
     out = out[:num_segments]
     if combine == "add":
         return out.astype(vals.dtype)
@@ -152,7 +161,15 @@ def segment_reduce(data, seg_ids, num_segments, combine="add",
 
     Integer add data accumulates in its own integer dtype -- the seed cast
     everything to float32, which silently rounds int sums above 2^24.
+
+    ``data`` may carry a trailing batch axis ([E, B] with shared [E] ids);
+    the 1-D kernels run per column.
     """
+    if data.ndim == 2:
+        return jnp.stack(
+            [segment_reduce(data[:, b], seg_ids, num_segments,
+                            combine=combine, interpret=interpret)
+             for b in range(data.shape[1])], axis=-1)
     identity = 0 if combine == "add" else push_min.SENTINEL
     data_p = _pad_to(data, BLOCK_E, identity)
     seg_p = _pad_to(seg_ids, BLOCK_E, 0)

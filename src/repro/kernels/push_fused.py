@@ -25,6 +25,13 @@ O((E/BE)*(V/BV) + (S/BS)*(E/BE)) to O(sum of band widths) -- measured ~11x
 fewer tiles at 1 chare (~32x at 8) on the scale-13 RMAT stand-in (see
 ``benchmarks.kernelbench.layout_cost_model``).
 
+Batched multi-query plane (DESIGN.md section 11): ``vals``/``out`` may carry
+a trailing batch axis (``[V, B]`` / ``[S, B]`` VMEM blocks, one column per
+query).  The edge stream, band tables, and tile pruning are shared across
+the batch -- one edge fetch serves B combines.  The add kernel's one-hot
+matmul widens naturally ([BLOCK_E, BLOCK_V] @ [BLOCK_V, B]); the min
+kernel's mask-and-reduce broadcasts the hit mask over the batch axis.
+
 On this CPU container the kernels execute through the Pallas interpreter
 (``interpret=True``); on TPU the same code compiles through Mosaic with the
 band bounds living in SMEM via ``PrefetchScalarGridSpec``.
@@ -61,19 +68,23 @@ def _fused_push_add_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
     src = src_ref[...]
     valid = (valid_ref[...] != 0)
 
+    batched = out_ref.ndim == 2  # trailing [*, B] query plane
+
     def gather(b, c):
         base = b * BLOCK_V
         hit = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
         hit = hit & valid[:, None]
         vblk = vals_ref[pl.ds(base, BLOCK_V)]
+        # [BLOCK_E, BLOCK_V] @ [BLOCK_V(, B)]: one edge fetch, B combines
         return c + jnp.dot(hit.astype(vblk.dtype), vblk,
                            preferred_element_type=c.dtype)
 
     c = jax.lax.fori_loop(
         band_ref[0, e], band_ref[1, e] + 1, gather,
-        jnp.zeros((BLOCK_E,), out_ref.dtype))
+        jnp.zeros((BLOCK_E,) + out_ref.shape[1:], out_ref.dtype))
     if weight_mode == "array":
-        c = c * w_ref[...].astype(c.dtype)
+        w = w_ref[...].astype(c.dtype)
+        c = c * (w[:, None] if batched else w)
     dst = dst_ref[...]
 
     def scatter(b, _):
@@ -107,20 +118,30 @@ def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
     src = src_ref[...]
     valid = (valid_ref[...] != 0)
 
+    batched = out_ref.ndim == 2  # trailing [*, B] query plane
+
     def gather(b, c):
         base = b * BLOCK_V
         hit = (src[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_V)[None, :])
         hit = hit & valid[:, None]
         vblk = vals_ref[pl.ds(base, BLOCK_V)]
-        cand = jnp.where(hit, vblk[None, :], jnp.asarray(SENTINEL, c.dtype))
+        sent = jnp.asarray(SENTINEL, c.dtype)
+        if batched:
+            # hit mask broadcast over the batch axis: one edge fetch serves
+            # all B query columns of the resident vals plane
+            cand = jnp.where(hit[:, :, None], vblk[None, :, :], sent)
+        else:
+            cand = jnp.where(hit, vblk[None, :], sent)
         return jnp.minimum(c, cand.min(axis=1))
 
     c = jax.lax.fori_loop(
         band_ref[0, e], band_ref[1, e] + 1, gather,
-        jnp.full((BLOCK_E,), SENTINEL, out_ref.dtype))
+        jnp.full((BLOCK_E,) + out_ref.shape[1:], SENTINEL, out_ref.dtype))
     if weight_mode != "none":
         w = jnp.ones((BLOCK_E,), c.dtype) if weight_mode == "unit" \
             else w_ref[...].astype(c.dtype)
+        if batched:
+            w = w[:, None]
         if jnp.issubdtype(out_ref.dtype, jnp.floating):
             c = c + w
         else:
@@ -131,7 +152,11 @@ def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
         base = b * BLOCK_S
         hit = (dst[:, None] == base + jax.lax.iota(jnp.int32, BLOCK_S)[None, :])
         hit = hit & valid[:, None]
-        cand = jnp.where(hit, c[:, None], jnp.asarray(SENTINEL, c.dtype))
+        sent = jnp.asarray(SENTINEL, c.dtype)
+        if batched:
+            cand = jnp.where(hit[:, :, None], c[:, None, :], sent)
+        else:
+            cand = jnp.where(hit, c[:, None], sent)
         cur = out_ref[pl.ds(base, BLOCK_S)]
         out_ref[pl.ds(base, BLOCK_S)] = jnp.minimum(cur, cand.min(axis=0))
         return 0
@@ -145,11 +170,13 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
 
     Shapes: edges padded to BLOCK_E (``band`` is [4, E/BLOCK_E] int32 from
     ``blocks.edge_bands``), ``vals`` padded to BLOCK_V, ``num_segments`` a
-    BLOCK_S multiple.  ``weight=None`` skips the edge-value transform;
-    ``unit_weight`` applies it with a compile-time constant 1 instead of a
-    streamed operand (the kernel is specialized, not masked).  The
-    accumulator/output dtype is the ``vals`` dtype for min and float32 (or
-    the input float dtype) for add.
+    BLOCK_S multiple.  ``vals`` may carry a trailing batch axis ([V, B]),
+    in which case ``out`` is [num_segments, B] and the edge stream and band
+    pruning are shared across the B query columns.  ``weight=None`` skips
+    the edge-value transform; ``unit_weight`` applies it with a compile-time
+    constant 1 instead of a streamed operand (the kernel is specialized, not
+    masked).  The accumulator/output dtype is the ``vals`` dtype for min and
+    float32 (or the input float dtype) for add.
     """
     E, V = src.shape[0], vals.shape[0]
     if unit_weight and weight is not None:
@@ -178,16 +205,24 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
         w_kernel = kernel
         kernel = lambda band, s, d, v, vals_ref, out_ref: \
             w_kernel(band, s, d, v, None, vals_ref, out_ref)
-    in_specs.append(pl.BlockSpec((V,), lambda e, band: (0,)))  # resident
+    if vals.ndim == 2:  # batched [V, B] plane, resident across the sweep
+        B = vals.shape[1]
+        in_specs.append(pl.BlockSpec((V, B), lambda e, band: (0, 0)))
+        out_spec = pl.BlockSpec((num_segments, B), lambda e, band: (0, 0))
+        out_shape = (num_segments, B)
+    else:
+        in_specs.append(pl.BlockSpec((V,), lambda e, band: (0,)))  # resident
+        out_spec = pl.BlockSpec((num_segments,), lambda e, band: (0,))
+        out_shape = (num_segments,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # the band table rides in SMEM
         grid=(E // BLOCK_E,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((num_segments,), lambda e, band: (0,)),
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_segments,), out_dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
         interpret=interpret,
     )(band, *operands, vals)

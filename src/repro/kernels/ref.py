@@ -1,16 +1,23 @@
-"""Pure-jnp oracles for the push kernels (no Pallas)."""
+"""Pure-jnp oracles for the push kernels (no Pallas), plus the serial
+Brandes reference for the approximate-betweenness program."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 SENTINEL = jnp.iinfo(jnp.int32).max
 
 
+def _expand(mask, data):
+    """Broadcast a per-edge [E] mask against [E] or batched [E, B] data."""
+    return mask.reshape(mask.shape + (1,) * (data.ndim - mask.ndim))
+
+
 def gather_sum_ref(src, valid, vals):
     c = vals.astype(jnp.float32)[src]
-    return jnp.where(valid != 0, c, 0.0)
+    return jnp.where(_expand(valid != 0, c), c, 0.0)
 
 
 def scatter_sum_ref(dst, c, num_segments):
@@ -19,7 +26,7 @@ def scatter_sum_ref(dst, c, num_segments):
 
 def gather_min_ref(src, valid, vals):
     c = vals[src]
-    return jnp.where(valid != 0, c, SENTINEL)
+    return jnp.where(_expand(valid != 0, c), c, SENTINEL)
 
 
 def scatter_min_ref(dst, c, num_segments):
@@ -30,16 +37,17 @@ def push_ref(vals, src, dst, valid, num_segments, combine="add", weight=None):
     """Full hot loop: out[s] = combine_{e: dst[e]==s, valid[e]} ev(vals[src[e]])
     where the optional per-edge ``weight`` applies the semiring transform
     (``* w`` for add, sentinel-saturating ``+ w`` for min).  Float min maps
-    sentinel-range results back to +inf, matching ``ops.push``."""
+    sentinel-range results back to +inf, matching ``ops.push``.  ``vals``
+    may carry a trailing batch axis ([V, B] -> [num_segments, B])."""
     if combine == "add":
         c = gather_sum_ref(src, valid, vals)
         if weight is not None:
-            c = c * weight.astype(c.dtype)
+            c = c * _expand(weight.astype(c.dtype), c)
         return scatter_sum_ref(dst, c, num_segments).astype(vals.dtype)
     c = gather_min_ref(src, valid, vals)
     floating = jnp.issubdtype(c.dtype, jnp.floating)
     if weight is not None:
-        w = weight.astype(c.dtype)
+        w = _expand(weight.astype(c.dtype), c)
         if floating:
             c = c + w
         else:
@@ -48,3 +56,51 @@ def push_ref(vals, src, dst, valid, num_segments, combine="add", weight=None):
     if floating:
         out = jnp.where(out >= SENTINEL, jnp.inf, out)
     return out
+
+
+def betweenness_ref(graph, pivots):
+    """Serial Brandes accumulation over the pivot set (numpy, no engine).
+
+    Unweighted directed betweenness approximated by running Brandes' forward
+    (sigma path counts by BFS level) and backward (delta dependency) sweeps
+    from each pivot, then scaling by V / len(pivots) to estimate the
+    all-sources sum.  Returns (scores float64 [V], supersteps) where
+    supersteps counts the BFS frontier expansions the engine would run
+    (the max eccentricity over pivots, +1 for the quiescence detection
+    step, matching ``bfs_serial``'s convention per pivot).
+    """
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    n = graph.num_vertices
+    scores = np.zeros(n, np.float64)
+    iters = 0
+    for s in pivots:
+        d = np.full(n, -1, np.int64)
+        sigma = np.zeros(n, np.float64)
+        d[s] = 0
+        sigma[s] = 1.0
+        level = 0
+        frontier = d == 0
+        while frontier.any():
+            on = frontier[src]
+            hit = on & (d[dst] == -1)
+            nxt = np.zeros(n, bool)
+            nxt[dst[hit]] = True
+            d[dst[hit]] = level + 1
+            dag = on & (d[dst] == level + 1)
+            np.add.at(sigma, dst[dag], sigma[src[dag]])
+            frontier = nxt
+            level += 1
+        iters = max(iters, level)
+        delta = np.zeros(n, np.float64)
+        for lvl in range(level, 0, -1):
+            dag = (d[src] == lvl - 1) & (d[dst] == lvl)
+            contrib = np.zeros(n, np.float64)
+            with np.errstate(invalid="ignore", divide="ignore"):
+                ratio = np.where(sigma[dst] > 0, sigma[src] / sigma[dst], 0.0)
+            np.add.at(contrib, src[dag], (ratio * (1.0 + delta[dst]))[dag])
+            delta = delta + contrib
+        delta[s] = 0.0
+        scores += delta
+    scores *= n / max(len(pivots), 1)
+    return scores, iters

@@ -1,0 +1,326 @@
+"""Batched multi-query execution (DESIGN.md section 11): the [*, B] state
+plane must be *invisible* -- every query column of ``Engine.run_batch`` must
+be bit-identical to its own sequential run, including the per-query superstep
+count, across strategies, partitioners, and plane widths (ragged query
+counts ride padded columns that are dropped on the way out).
+
+Also covered here: the kernel-level batched push/segment-reduce paths vs
+their column-stacked 1-D selves, the B-bucket compile-cache policy, the
+wire model's ``batch`` parameter, per-query convergence masking, the
+betweenness program (multi-source BFS plane + host Brandes) vs the serial
+reference, batched replanning, the ``GraphQueryServer`` admission loop, and
+the analytic >=4x-at-B=16 throughput acceptance model.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import ALL_STRATEGIES, graph, program_graph
+from repro.core import (Engine, get_spec, partition, rmat, run_parallel,
+                        wire_model)
+from repro.core import programs as P
+from repro.core.engine import ReplanPolicy
+from repro.kernels import ops, ref
+
+# explicit ids so CI can run the B=4 smoke subset with ``-k B4``
+BATCHES = [pytest.param(1, id="B1"), pytest.param(4, id="B4"),
+           pytest.param(16, id="B16")]
+# contiguous (identity relabel) + degree_sorted (a real permutation: the
+# un-permute path must translate every query column back)
+BATCH_PARTITIONERS = ("contiguous", "degree_sorted")
+
+
+def _sources(g, n, seed):
+    rng = np.random.default_rng(seed)
+    return [int(s) for s in rng.integers(0, g.num_vertices, n)]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: batched == sequential, bit-for-bit, column by column
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B", BATCHES)
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_batched_matches_sequential(strategy, B):
+    """Min-monoid sweep: every column of the batched plane == its own serial
+    run (values AND iteration count), with a ragged query count (n < B) so
+    the padding columns are exercised and dropped."""
+    for algo in ("sssp", "bfs"):
+        spec = get_spec(algo)
+        g = program_graph(algo, "rmat6")
+        n = max(1, B - 1)
+        sources = _sources(g, n, seed=B)
+        for pname in BATCH_PARTITIONERS:
+            eng = Engine(partition(g, 1, partitioner=pname),
+                         strategy=strategy)
+            plane, iters = eng.run_batch(algo, sources=sources, batch=B)
+            assert plane.shape == (n, g.num_vertices)
+            for i, s in enumerate(sources):
+                want, want_it = spec.serial(g, source=s)
+                np.testing.assert_array_equal(
+                    plane[i], want,
+                    err_msg=f"{algo}/{strategy}/{pname}/B{B} query {i}")
+                assert int(iters[i]) == want_it, \
+                    f"{algo}/{strategy}/{pname}/B{B} query {i} iters"
+
+
+def test_seed_set_column_is_elementwise_min():
+    """A multi-seed query column equals the elementwise min over its seeds'
+    single-source runs (min-monoid superposition)."""
+    g = program_graph("bfs", "rmat6")
+    eng = Engine(partition(g, 1))
+    seeds = (3, 17, 40)
+    plane, _ = eng.run_batch("bfs", sources=[seeds])
+    singles, _ = eng.run_batch("bfs", sources=list(seeds))
+    np.testing.assert_array_equal(plane[0], singles.min(axis=0))
+
+
+def test_per_query_convergence_masking():
+    """Queries quiesce independently: a query seeded at an edgeless vertex
+    converges in one superstep while its batch-mate keeps running, and the
+    reported per-query counts match the sequential ones exactly."""
+    g = graph("isolated_vertices")  # edges 0->1->2; vertices 3..6 edgeless
+    eng = Engine(partition(g, 1))
+    plane, iters = eng.run_batch("bfs", sources=[0, 4], batch=4)
+    for i, s in enumerate((0, 4)):
+        want, want_it = P.bfs_serial(g, source=s)
+        np.testing.assert_array_equal(plane[i], want)
+        assert int(iters[i]) == want_it
+    assert int(iters[1]) == 1  # isolated seed: first sweep changes nothing
+    assert int(iters[0]) > int(iters[1])
+
+
+# ---------------------------------------------------------------------------
+# B-bucket compile-cache policy
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rounds_up_to_power_of_two():
+    assert [Engine._bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 16, 17)] \
+        == [1, 2, 4, 4, 8, 8, 16, 16, 32]
+
+
+def test_compile_cache_keyed_by_bucket_not_sources():
+    """Same B-bucket -> same compiled program regardless of the seed list
+    (seeds live in the state); a new bucket compiles once more."""
+    g = program_graph("bfs", "rmat6")
+    eng = Engine(partition(g, 1))
+    base = len(eng._compiled)
+    eng.run_batch("bfs", sources=[1, 2, 3])  # bucket B=4
+    assert len(eng._compiled) == base + 1
+    eng.run_batch("bfs", sources=[9, 8, 7, 6])  # still B=4, new seeds
+    assert len(eng._compiled) == base + 1
+    eng.run_batch("bfs", sources=[1, 2, 3, 4, 5])  # bucket B=8
+    assert len(eng._compiled) == base + 2
+
+
+def test_run_batch_argument_errors():
+    g = program_graph("bfs", "rmat6")
+    eng = Engine(partition(g, 1))
+    with pytest.raises(ValueError, match="batched init"):
+        eng.run_batch("pagerank", sources=[0])
+    with pytest.raises(ValueError, match="sources"):
+        eng.run_batch("bfs")  # bfs has no default source list
+    with pytest.raises(ValueError, match="smaller"):
+        eng.run_batch("bfs", sources=[0, 1, 2], batch=2)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.run_batch("bfs", sources=[g.num_vertices])
+    with pytest.raises(ValueError, match="empty seed set"):
+        eng.run_batch("bfs", sources=[()])
+
+
+# ---------------------------------------------------------------------------
+# Kernel layer: the [V, B] plane vs column-stacked 1-D sweeps
+# ---------------------------------------------------------------------------
+
+
+def _edges(E, V, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, V, E).astype(np.int32),
+            rng.integers(0, V, E).astype(np.int32),
+            rng.integers(0, 2, E).astype(np.int32), rng)
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "staged"])
+def test_push_batched_matches_columns(fused):
+    E, V, B = 512, 256, 3
+    src, dst, valid, rng = _edges(E, V, seed=11)
+    w = rng.random(E).astype(np.float32)
+    cases = [
+        ("add", rng.normal(size=(V, B)).astype(np.float32), w),
+        ("add", rng.normal(size=(V, B)).astype(np.float32), None),
+        ("min", rng.integers(0, 10_000, (V, B)).astype(np.int32), None),
+        ("min", rng.random((V, B)).astype(np.float32) * 100, w),
+    ]
+    for combine, vals, weight in cases:
+        got = ops.push(vals, src, dst, valid, V, combine=combine,
+                       weight=weight, fused=fused)
+        want = np.stack([
+            np.asarray(ops.push(vals[:, b], src, dst, valid, V,
+                                combine=combine, weight=weight, fused=fused))
+            for b in range(B)], axis=-1)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                   err_msg=f"{combine} weighted={weight is not None}")
+
+
+def test_push_batched_unit_weight_matches_columns():
+    E, V, B = 512, 256, 4
+    src, dst, valid, rng = _edges(E, V, seed=7)
+    vals = rng.integers(0, 1000, (V, B)).astype(np.int32)
+    got = ops.push(vals, src, dst, valid, V, combine="min", unit_weight=True)
+    want = np.stack([
+        np.asarray(ops.push(vals[:, b], src, dst, valid, V, combine="min",
+                            unit_weight=True)) for b in range(B)], axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_segment_reduce_batched_matches_columns():
+    N, S, B = 300, 64, 3
+    rng = np.random.default_rng(5)
+    seg = rng.integers(0, S, N).astype(np.int32)
+    for combine, data in (("add", rng.normal(size=(N, B)).astype(np.float32)),
+                          ("min", rng.integers(0, 99, (N, B)).astype(np.int32))):
+        got = ops.segment_reduce(data, seg, S, combine=combine)
+        want = np.stack([
+            np.asarray(ops.segment_reduce(data[:, b], seg, S, combine=combine))
+            for b in range(B)], axis=-1)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_push_ref_batched_matches_columns():
+    E, V, B = 400, 128, 3
+    src, dst, valid, rng = _edges(E, V, seed=3)
+    w = rng.random(E).astype(np.float32)
+    vals = rng.random((V, B)).astype(np.float32) * 50
+    for combine in ("add", "min"):
+        got = ref.push_ref(vals, src, dst, valid, V, combine=combine,
+                           weight=w)
+        want = np.stack([
+            np.asarray(ref.push_ref(vals[:, b], src, dst, valid, V,
+                                    combine=combine, weight=w))
+            for b in range(B)], axis=-1)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Betweenness: the batched plane's first consumer
+# ---------------------------------------------------------------------------
+
+
+def test_betweenness_engine_matches_serial_ref():
+    """Engine route (batched BFS depths -> host Brandes) vs the independent
+    serial reference (its own BFS per pivot)."""
+    g = program_graph("betweenness", "rmat6")
+    pivots = (0, 5, 9, 33)
+    got, iters = run_parallel(g, "betweenness", num_pes=1, pivots=pivots)
+    want, want_it = P.betweenness_serial(g, pivots=pivots)
+    np.testing.assert_allclose(got, want, atol=1e-9)
+    assert iters == want_it
+
+
+def test_betweenness_registered_with_defaults():
+    spec = get_spec("betweenness")
+    assert spec.defaults["pivots"] == (0, 1, 2, 3)
+    g = program_graph("betweenness", "two_cliques10")
+    got, _ = run_parallel(g, "betweenness", num_pes=1)
+    want, _ = P.betweenness_serial(g)
+    assert spec.matches(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Batched replanning (dynamic repartition under a live [*, K, B] plane)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_replan_matches_unreplanned():
+    """A mid-run placement switch must be invisible to every query column:
+    same plane, same per-query superstep counts."""
+    g = program_graph("sssp", "rmat6")
+    sources = [0, 11, 30]
+    eng = Engine(partition(g, 1))
+    want_plane, want_it = eng.run_batch("sssp", sources=sources)
+    policy = ReplanPolicy(partitioner="degree_sorted", every=2,
+                          mode="always", max_replans=2)
+    eng2 = Engine(partition(g, 1))
+    got_plane, got_it = eng2.run_batch("sssp", sources=sources, replan=policy)
+    np.testing.assert_array_equal(got_plane, want_plane)
+    np.testing.assert_array_equal(got_it, want_it)
+
+
+# ---------------------------------------------------------------------------
+# Serving loop: fixed-B admission over one engine
+# ---------------------------------------------------------------------------
+
+
+def test_graph_query_server_admission_and_results():
+    from repro.launch.serve import GraphQueryServer
+
+    g = program_graph("sssp", "rmat6")  # weighted: serves sssp AND bfs
+    eng = Engine(partition(g, 1))
+    server = GraphQueryServer(eng, batch=4)
+    bfs_srcs, sssp_src = [1, 7, 22, 40], 9
+    ids = [server.submit("bfs", s) for s in bfs_srcs[:2]]
+    mid = server.submit("sssp", sssp_src)  # incompatible: must not ride along
+    ids += [server.submit("bfs", s) for s in bfs_srcs[2:]]
+
+    done = server.step()  # head is bfs: admits all 4 bfs, skips the sssp
+    assert done == ids
+    assert server.pending() == 1 and server.dispatches == 1
+    warm = len(eng._compiled)
+    assert server.drain() == 1  # the sssp dispatch
+    assert server.dispatches == 2
+
+    for rid, s in zip(ids, bfs_srcs):
+        row, it = server.result(rid)
+        want, want_it = P.bfs_serial(g, source=s)
+        np.testing.assert_array_equal(row, want)
+        assert it == want_it
+    row, it = server.result(mid)
+    want, want_it = P.sssp_serial(g, source=sssp_src)
+    np.testing.assert_array_equal(row, want)
+    assert it == want_it
+
+    # steady state: another full bfs batch reuses the warm compile cache
+    ids2 = [server.submit("bfs", s) for s in (2, 3, 4, 5)]
+    n_compiled = len(eng._compiled)
+    server.step()
+    assert len(eng._compiled) == n_compiled
+    assert n_compiled >= warm  # sssp added entries; bfs batch added none
+    with pytest.raises(KeyError):
+        server.result(10_000)
+    row2, _ = server.result(ids2[0])
+    want2, _ = P.bfs_serial(g, source=2)
+    np.testing.assert_array_equal(row2, want2)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the analytic >=4x-at-B=16 throughput model + wire B-sweep
+# ---------------------------------------------------------------------------
+
+
+def test_batched_cost_model_acceptance():
+    """ISSUE 6 acceptance: on the scale-13 stand-in layout (8 chares), the
+    batched plane's modeled throughput at B=16 is >=4x the per-query loop --
+    the edge stream (the memory-bound side) is paid once for all 16."""
+    from benchmarks import kernelbench
+
+    pg = partition(rmat(13, 8 * (1 << 13), seed=0), 8)
+    bm = kernelbench.batched_cost_model(pg, 16)
+    assert bm["speedup"] >= 4.0
+    assert bm["tiles_per_query_batched"] * 16 == bm["tiles_per_query_seq"]
+    assert bm["queries_per_sec_batched"] > bm["queries_per_sec_seq"]
+
+
+def test_wire_model_batch_scaling():
+    """Value payloads scale with B; ``basic``'s per-edge index side does not
+    (one shared dst index per pair), so its per-query bytes shrink."""
+    g = graph("rmat6")
+    base = wire_model(g, 4)
+    assert base == wire_model(g, 4, batch=1)  # B=1 is the old model
+    b4 = wire_model(g, 4, batch=4)
+    for variant in ("reduction", "sortdest", "pairs"):
+        assert b4[variant] == 4 * base[variant]
+    assert b4["basic"] == base["basic"] * (1 + 4) / 2  # index amortizes
+    g2 = wire_model(g, 4, partitioner="grid(2,2)", batch=4)
+    assert g2["grid2d"] == 4 * wire_model(g, 4, partitioner="grid(2,2)")["grid2d"]

@@ -106,6 +106,24 @@ for pes in (2, 8):
 results["replan_ok"] = bool(replan_ok)
 results["replan_pagerank_err"] = replan_err
 
+# ---- 1e) batched [*, B] plane at real multi-PE: every query column of one
+# run_batch sweep must equal its own sequential serial run, bit-exact, with
+# per-query superstep counts intact (the batch axis rides through shard_map
+# and the leading-axis collectives untouched)
+from repro.core import Engine, partition
+batch_ok = True
+batch_srcs = [7, 0, 91, 200, 133]
+for pes in (2, 8):
+    for strat in ("reduction", "basic"):
+        eng = Engine(partition(gw, pes, partitioner="edge_balanced"),
+                     strategy=strat)
+        plane, q_it = eng.run_batch("sssp", sources=batch_srcs, batch=8)
+        for i, s in enumerate(batch_srcs):
+            want, want_it = sssp_serial(gw, source=s)
+            batch_ok &= bool(np.array_equal(plane[i], want))
+            batch_ok &= int(q_it[i]) == want_it
+results["batch_ok"] = bool(batch_ok)
+
 # ---- 2) sharded MoE == dense reference ------------------------------------
 from repro.models.config import ModelConfig
 from repro.models import moe as MOE
@@ -306,6 +324,7 @@ def test_multidevice_suite():
     assert res["push_hook_max_err"] < 1e-3
     assert res["replan_ok"]
     assert res["replan_pagerank_err"] < 1e-3
+    assert res["batch_ok"]
     assert res["moe_err"] == 0.0
     assert res["ring_attn_err"] < 2e-6
     assert res["train_loss_delta"] < 1e-3
