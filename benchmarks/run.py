@@ -18,6 +18,10 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
              plus the TPU amortization model (also in BENCH_cost.json)
   grid.*     2-D grid partitioning: per-rectangle skew + two-phase-reduce
              wire bytes vs the best 1-D variant (also in BENCH_cost.json)
+  async.*    barrier-relaxed execution: measured barrier-vs-overlap SSSP
+             supersteps, frontier-gate launch accounting (host model +
+             measured 8-PE grid(2,4) run), and grouped-vs-full phase-2
+             collective bytes from the compiled HLO (also in BENCH_cost.json)
   kernel.*   push-kernel validation + timing + staged/fused TPU cost model
   dispatch.* what push_fn='auto' chose per layout (fused on the power-law
              stand-in, staged on a near-uniform contrast graph)
@@ -179,6 +183,37 @@ def main():
          f"{tp['measured_speedup']:.2f}",
          f"budget={tp['superstep_budget']} supersteps")
     cost_json["throughput"] = {**tp, "model": bm}
+
+    # ---- barrier-relaxed async execution (DESIGN.md section 12) ------------
+    at = tables.async_table(scale_log2=scale, repeats=repeats)
+    assert at["bit_exact"], "overlap SSSP diverged from barrier"
+    emit("async.sssp.barrier@1", f"{at['barrier_s']:.4f}",
+         f"iters={at['it_barrier']}")
+    emit("async.sssp.overlap@1", f"{at['overlap_s']:.4f}",
+         f"iters={at['it_overlap']} bit_exact={at['bit_exact']}")
+    emit("async.sssp.superstep_s",
+         f"{at['superstep_overlap_s']:.2e}",
+         f"barrier={at['superstep_barrier_s']:.2e} s/superstep")
+    gm = tables.gating_model(scale_log2=scale)
+    emit("async.gating_model.lockstep_skipped",
+         f"{gm['skipped_fraction']:.3f}",
+         f"launched={gm['launched']}/{gm['launch_slots']} "
+         f"grid{tuple(gm['shape'])} supersteps={gm['supersteps']}")
+    am = tables.async_multidevice_metrics(scale_log2=scale)
+    assert am["bit_exact"], "8-PE overlap+gate SSSP diverged from serial"
+    ag = am["gate"]
+    # the ISSUE acceptance bound: frontier gating launches at most half the
+    # lockstep rectangle slots on the power-law stand-in
+    assert ag["launched"] <= 0.5 * ag["launch_slots"], ag
+    emit("async.grid24.gate_skipped", f"{ag['skipped_fraction']:.3f}",
+         f"launched={ag['launched']}/{ag['launch_slots']} "
+         f"iters={am['iters']} (8 PEs, overlap+gate)")
+    assert am["measured_ratio"] <= 0.6, am
+    emit("async.grid24.collective_ratio", f"{am['measured_ratio']:.3f}",
+         f"grouped={am['collective_bytes_measured']['grouped']:.3e} "
+         f"full={am['collective_bytes_measured']['full']:.3e} "
+         f"model={am['collective_bytes_model']['ratio']:.3f} (HLO-measured)")
+    cost_json["async"] = {"pe1": at, "gating_model": gm, "grid24_8pe": am}
 
     kernels_json = {
         "schema": 1,

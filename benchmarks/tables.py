@@ -183,6 +183,152 @@ def grid_table(scale_log2: int = 13, shapes=((2, 4), (4, 2))):
     return rows
 
 
+def async_table(scale_log2: int = 13, repeats: int = 3,
+                dskey: str = "soc-lj1-mini") -> dict:
+    """Measured lockstep vs barrier-relaxed execution at PE=1 (DESIGN.md
+    section 12): whole-run and per-superstep seconds for ``sync='barrier'``
+    vs ``sync='overlap'`` + frontier gating on SSSP, with the engine's
+    launch accounting.  The barrier cost the paper's actor argument is
+    about is the per-superstep delta; at 1 PE the collective is a copy, so
+    the measured delta is a floor -- the multi-PE wire story is the
+    ``collective_bytes`` model/measurement next to it.
+    """
+    import numpy as np
+
+    spec = get_spec("sssp")
+    g = load_dataset(dskey, scale_log2=scale_log2, weighted=spec.weighted)
+    g = spec.prepare_graph(g)
+    eng = Engine(partition(g, 1))
+    run_b = lambda: eng.run("sssp", source=0)
+    out_b, it_b = run_b()
+    t_b = bench(run_b, repeats)
+    run_o = lambda: eng.run("sssp", source=0, sync="overlap",
+                            gate="frontier")
+    out_o, it_o = run_o()
+    gate = dict(eng.dispatch["gate"])
+    t_o = bench(run_o, repeats)
+    return {
+        "barrier_s": t_b, "overlap_s": t_o,
+        "it_barrier": it_b, "it_overlap": it_o,
+        "superstep_barrier_s": t_b / max(it_b, 1),
+        "superstep_overlap_s": t_o / max(it_o, 1),
+        "bit_exact": bool(np.array_equal(out_b, out_o)),
+        "gate": gate,
+    }
+
+
+def gating_model(scale_log2: int = 13, shape=(2, 4),
+                 dskey: str = "soc-lj1-mini") -> dict:
+    """Host-side frontier-gating model on the lockstep schedule: serial
+    Jacobi SSSP sweeps give the per-superstep frontier; each sweep's live
+    BLOCK_V blocks (in the grid's ROW-relabelled vertex order) intersect
+    each rectangle's band source mask, and a rectangle with no intersection
+    is a skipped launch.  Pure numpy -- no devices -- so the full scale-13
+    stand-in is cheap; the measured engine twin (overlap schedule, real
+    8-PE run) comes from ``async_multidevice_metrics``.
+    """
+    import numpy as np
+
+    from repro.core.partitioners import row_plan_of
+    from repro.kernels import blocks
+
+    spec = get_spec("sssp")
+    g = load_dataset(dskey, scale_log2=scale_log2, weighted=spec.weighted)
+    g = spec.prepare_graph(g)
+    R, C = shape
+    pg = partition(g, R * C, partitioner=f"grid({R},{C})")
+    K = pg.chunk_size
+    nsb = max(-(-K // blocks.BLOCK_V), 1)
+    gmask = blocks.band_source_mask(np.asarray(pg.gr_band), nsb) != 0
+    g2l, _ = row_plan_of(pg.plan).relabel()
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.edge_weights, np.float64)
+    dist = np.full(g.num_vertices, np.inf)
+    dist[0] = 0.0
+    frontier = np.zeros(g.num_vertices, bool)
+    frontier[0] = True
+    launched = slots = sweeps = 0
+    while frontier.any():
+        f_pad = np.zeros(R * K, np.int32)
+        f_pad[g2l[np.nonzero(frontier)[0]]] = 1
+        for k in range(R * C):
+            r = k // C
+            fb = blocks.frontier_block_mask(f_pad[r * K:(r + 1) * K], nsb)
+            launched += int((fb.astype(bool) & gmask[k]).any())
+        slots += R * C
+        new = dist.copy()
+        on = frontier[src]
+        np.minimum.at(new, dst[on], dist[src[on]] + w[on])
+        frontier = new != dist
+        dist = new
+        sweeps += 1
+    return {
+        "shape": list(shape), "supersteps": sweeps,
+        "launch_slots": slots, "launched": launched,
+        "skipped_launches": slots - launched,
+        "skipped_fraction": (slots - launched) / slots if slots else 0.0,
+    }
+
+
+# Runs in a forced-8-device subprocess (the benchmark process keeps the real
+# single device): measured gate accounting from an overlap+gate SSSP run on
+# the grid, plus collective bytes of the compiled step for both phase-2
+# lowerings (launch.hloanalysis on the optimized HLO).
+_ASYNC_GRID_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+scale = int(os.environ.get("REPRO_BENCH_SCALE", "13"))
+import json
+import numpy as np
+from repro.core import Engine, get_spec, load_dataset, partition
+from repro.core.cost import grid_collective_bytes
+from repro.launch import hloanalysis
+
+spec = get_spec("sssp")
+g = load_dataset("soc-lj1-mini", scale_log2=scale, weighted=spec.weighted)
+g = spec.prepare_graph(g)
+ref = spec.run_serial(g, source=0)
+pg = partition(g, 8, partitioner="grid(2,4)")
+eng = Engine(pg)
+out, it = eng.run("sssp", source=0, sync="overlap", gate="frontier")
+bytes_by = {}
+for coll in ("grouped", "full"):
+    text = Engine(pg, collectives=coll).step_hlo("sssp", source=0)
+    bytes_by[coll] = hloanalysis.analyze(text, 8).collective_bytes
+model = grid_collective_bytes(g, 8, "grid(2,4)")
+print("RESULTS " + json.dumps({
+    "bit_exact": bool(np.array_equal(out, np.asarray(ref))),
+    "iters": it,
+    "gate": eng.dispatch["gate"],
+    "collective_bytes_measured": bytes_by,
+    "measured_ratio": bytes_by["grouped"] / bytes_by["full"],
+    "collective_bytes_model": model,
+}))
+"""
+
+
+def async_multidevice_metrics(scale_log2: int = 13) -> dict:
+    """-> the ``_ASYNC_GRID_SCRIPT`` metrics dict (measured 8-PE gate
+    accounting + grouped-vs-full collective bytes at grid(2,4))."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["REPRO_BENCH_SCALE"] = str(scale_log2)
+    root = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _ASYNC_GRID_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"async grid metrics failed: {out.stderr[-2000:]}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULTS ")][-1]
+    return json.loads(line[len("RESULTS "):])
+
+
 def imbalance_table(scale_log2: int = 13, pe_counts=(8,), partitioners=None):
     """Per-chare load skew per placement policy -- the paper's imbalance
     observation as a measurable table.

@@ -10,8 +10,10 @@ absorbed exactly once.
 from __future__ import annotations
 
 import contextlib
+import os
 
 import jax
+import jax.numpy as jnp
 
 try:  # newer jax: explicit axis types on mesh creation
     from jax.sharding import AxisType  # noqa: F401
@@ -89,6 +91,80 @@ def cost_analysis(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return dict(cost)
+
+
+# --------------------------------------------------------------------------
+# Grouped collectives (axis_index_groups under shard_map)
+# --------------------------------------------------------------------------
+#
+# ``jax.lax.psum/pmin(..., axis_index_groups=...)`` is the native way to
+# reduce over a *subset* of an axis (grid2d's column groups).  Support for it
+# inside ``shard_map`` bodies varies by JAX version and by execution mode
+# (interpret-mode shard_map on 0.4.x rejects the kwarg).  ``grouped_reduce``
+# tries the native lowering first and otherwise emulates it with a
+# group-expanded full-axis reduce: each shard scatters its contribution into
+# its own group's row of a ``[n_groups, ...]`` buffer (identity elsewhere),
+# one full-axis reduce combines all groups at once, and the shard reads its
+# group's row back.  Same result, full-axis wire cost -- a correctness
+# fallback, not a performance path.
+#
+# ``REPRO_GROUPED`` selects the mode: ``auto`` (default -- native with
+# fallback), ``native`` (force, surface lowering failures), ``emulate``
+# (force the fallback; CI exercises both).
+
+_GROUPED_IDENT = {
+    "add": lambda dt: jnp.zeros((), dt),
+    "min": lambda dt: (jnp.asarray(jnp.inf, dt)
+                       if jnp.issubdtype(dt, jnp.floating)
+                       else jnp.asarray(jnp.iinfo(dt).max, dt)),
+}
+
+
+def grouped_mode() -> str:
+    return os.environ.get("REPRO_GROUPED", "auto")
+
+
+def _emulated_grouped_reduce(x, axis, groups, combine):
+    import numpy as np
+
+    total = sum(len(g) for g in groups)
+    group_of = np.empty(total, dtype=np.int32)
+    for gi, g in enumerate(groups):
+        group_of[list(g)] = gi
+    me = jax.lax.axis_index(axis)
+    gid = jnp.asarray(group_of)[me]
+    ident = _GROUPED_IDENT[combine](x.dtype)
+    big = jnp.full((len(groups),) + x.shape, ident, x.dtype)
+    big = big.at[gid].set(x)
+    full = jax.lax.psum(big, axis) if combine == "add" \
+        else jax.lax.pmin(big, axis)
+    return full[gid]
+
+
+def grouped_reduce(x, axis, groups, combine, mode=None):
+    """Reduce ``x`` over ``axis`` within each index group.
+
+    ``groups`` is a static partition of the axis indices (list of lists,
+    every index exactly once); ``combine`` is ``"add"`` or ``"min"``.  Each
+    shard receives the reduction over its own group.  Min-monoid results are
+    bit-exact against the full-axis lowering in either mode (min is
+    order-free); add may differ by float reassociation only.
+    """
+    if combine not in _GROUPED_IDENT:
+        raise ValueError(f"grouped_reduce: unsupported combine {combine!r}")
+    groups = [list(g) for g in groups]
+    if len(groups) == 1:  # degenerate: one group == the whole axis
+        return jax.lax.psum(x, axis) if combine == "add" \
+            else jax.lax.pmin(x, axis)
+    mode = mode or grouped_mode()
+    if mode != "emulate":
+        try:
+            op = jax.lax.psum if combine == "add" else jax.lax.pmin
+            return op(x, axis, axis_index_groups=groups)
+        except (NotImplementedError, ValueError, TypeError):
+            if mode == "native":  # explicit request -- surface the failure
+                raise
+    return _emulated_grouped_reduce(x, axis, groups, combine)
 
 
 def in_manual_region() -> bool:

@@ -172,3 +172,41 @@ def wire_model(graph: Graph, num_pes: int, value_bytes: int = 4,
         # does not scale with the batch); B=1 reproduces 2*Emax*2*b
         "basic": 2 * e_max * value_bytes * (1 + B),
     }
+
+
+def grid_collective_bytes(graph, num_pes: int, partitioner: str,
+                          value_bytes: int = 4, batch: int = 1) -> dict:
+    """Phase-2 collective bytes/device/superstep for BOTH grid2d lowerings.
+
+    Unlike ``wire_model``'s semantic grid entry (which caps the combine
+    payload at the rectangle's edge count), this prices what the two XLA
+    lowerings actually put on the wire -- dense buffers, ring all-reduce at
+    2*bytes*(g-1)/g per device for a group of size g:
+
+        full:    one full-axis reduce of the [C*Kc] column-space buffer
+                 over all P = R*C shards          -> 2*C*Kc*b*(P-1)/P
+        grouped: a column-group reduce of the shard's own [Kc] slice
+                 (groups of size R) plus a row-group reduce of the [Kr]
+                 row-chunk state (groups of size C)
+                 -> 2*Kc*b*(R-1)/R + 2*Kr*b*(C-1)/C
+
+    The grouped/full ratio at grid(2,4) is 4/7 ~ 0.57: the measured HLO
+    collective bytes (``launch.hloanalysis.analyze`` on the compiled step,
+    see ``Engine.step_hlo``) must land on the same numbers -- both are
+    test-enforced at <= 0.6 (ISSUE 7 acceptance).  ``batch`` scales every
+    payload by B exactly as in ``wire_model``.
+    """
+    from repro.core.partitioners import GridPlan, make_plan
+
+    plan = make_plan(graph, num_pes, partitioner)
+    if not isinstance(plan, GridPlan):
+        raise ValueError(f"{partitioner!r} is not a grid partitioner")
+    R, C = plan.rows, plan.cols
+    P = R * C
+    b = value_bytes * max(int(batch), 1)
+    Kc, Kr = plan.col_chunk_size, plan.chunk_size
+    full = 2 * C * Kc * b * (P - 1) / max(P, 1)
+    grouped = (2 * Kc * b * (R - 1) / max(R, 1)
+               + 2 * Kr * b * (C - 1) / max(C, 1))
+    return {"full": full, "grouped": grouped,
+            "ratio": grouped / full if full else 1.0}

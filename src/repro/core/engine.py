@@ -122,8 +122,12 @@ class Engine:
     segment_fn: object = None  # optional kernel override for local combines
     push_fn: object = "auto"  # 'auto' | None | fused-kernel hook for the
     #                           whole gather/transform/combine loop
+    collectives: str = "auto"  # grid2d phase-2 lowering: 'auto' (grouped),
+    #                            'grouped' (axis_index_groups), 'full'
 
     def __post_init__(self):
+        if self.collectives not in ("auto", "grouped", "full"):
+            raise ValueError(f"unknown collectives mode {self.collectives!r}")
         if self.strategy not in strat.STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {sorted(strat.STRATEGIES)}")
@@ -167,12 +171,37 @@ class Engine:
             rows, cols = pg.grid_shape
             # the static grid meta rides in via partial: strategies share one
             # positional signature and only grid2d needs the column geometry
+            self._grid_meta = (rows, cols, pg.col_chunk_size)
+            self._collectives = ("grouped" if self.collectives == "auto"
+                                 else self.collectives)
             self._fn = functools.partial(
-                strat.grid2d, grid_meta=(rows, cols, pg.col_chunk_size))
+                strat.grid2d, grid_meta=self._grid_meta,
+                collectives=self._collectives)
         else:
+            self._grid_meta = None
+            self._collectives = "full"
             self._fn = strat.STRATEGIES[self.strategy]
         self._C, self._K = self.pg.num_chunks, self.pg.chunk_size
+        # frontier-gating geometry: which BLOCK_V source blocks each shard's
+        # edges can gather from at all (ones when the layout has no band
+        # table -- the pairwise variant then gates on "any frontier at all")
+        from repro.kernels import blocks as blk
+
+        self._gate_nsb = max(-(-self._K // blk.BLOCK_V), 1)
+        if "gate_blocks" not in self.arrays:
+            # installed into the shared per-layout upload cache: the mask is
+            # a pure function of (partition, layout), so every engine aliasing
+            # this dict computes the identical table and the first one ships it
+            layout = strat.STRATEGY_LAYOUT[self.strategy]
+            band = {"basic": lambda: self.pg.band,
+                    "sd": lambda: self.pg.sd_band,
+                    "grid": lambda: self.pg.gr_band}.get(layout)
+            gmask = (blk.band_source_mask(np.asarray(band()), self._gate_nsb)
+                     if band is not None
+                     else np.ones((self._C, self._gate_nsb), np.int32))
+            self.arrays["gate_blocks"] = jnp.asarray(gmask)
         self.dispatch = self._resolve_dispatch()
+        self.dispatch["collectives"] = self._collectives
         self._compiled = {}  # program.key -> jitted fn; timing must not
         #                      rebuild the closure (COST times compute only)
 
@@ -242,15 +271,68 @@ class Engine:
             out_specs=tuple(P(AXIS, None) for _ in range(n_out)),
             check_vma=False)
 
+    def _phase1(self, vals, arrs, combiner, edge_value=None,
+                edge_semiring=None):
+        p1, _ = strat.PHASES[self.strategy]
+        return p1(vals, arrs, combiner, self._C, self._K,
+                  segment_fn=self.segment_fn, edge_value=edge_value,
+                  push_fn=self.push_fn, edge_semiring=edge_semiring,
+                  grid_meta=self._grid_meta)
+
+    def _phase2(self, partial, arrs, combiner):
+        _, p2 = strat.PHASES[self.strategy]
+        return p2(partial, arrs, combiner, self._C, self._K,
+                  segment_fn=self.segment_fn, grid_meta=self._grid_meta,
+                  collectives=self._collectives)
+
     def _propagate(self, vals, arrs, combiner, edge_value=None,
                    edge_semiring=None):
-        return self._fn(vals, arrs, combiner, self._C, self._K,
-                        segment_fn=self.segment_fn, edge_value=edge_value,
-                        push_fn=self.push_fn, edge_semiring=edge_semiring)
+        return self._phase2(
+            self._phase1(vals, arrs, combiner, edge_value, edge_semiring),
+            arrs, combiner)
+
+    def _push_closure(self, program, gate, arrs):
+        """-> ``push(vals, frontier) -> (partial, active)``: phase 1,
+        optionally gated on the frontier/band-block intersection.
+
+        The gate is the rectangle-skipping test (DESIGN.md section 12): the
+        live frontier reduced to BLOCK_V block granularity against the
+        shard's precomputed band source-block mask.  A shard with no
+        intersection skips its whole local push via ``lax.cond`` and feeds
+        the identity partial to phase 2 -- which still runs unconditionally
+        on every shard, collectives being SPMD.  Phase 1 contains no
+        collectives by construction, so per-shard divergence is safe.
+        """
+        from repro.kernels import blocks as blk
+
+        comb = program.combiner
+        p1 = lambda v: self._phase1(v, arrs, comb, program.edge_value,
+                                    program.edge_semiring)
+        if not gate:
+            return lambda vals, frontier: (p1(vals), jnp.asarray(True))
+        gate_blocks = arrs["gate_blocks"] != 0  # per-shard [nsb]
+        nsb = self._gate_nsb
+
+        def push(vals, frontier):
+            f = frontier.any(axis=-1) if frontier.ndim == 2 else frontier
+            pad = nsb * blk.BLOCK_V - f.shape[0]
+            if pad:
+                f = jnp.pad(f, (0, pad))
+            fb = f.reshape(nsb, blk.BLOCK_V).any(axis=1)
+            active = (fb & gate_blocks).any()
+            partial = jax.lax.cond(
+                active, p1,
+                lambda v: strat.phase1_identity(
+                    self.strategy, v, arrs, comb, self._C, self._K,
+                    self._grid_meta),
+                vals)
+            return partial, active
+
+        return push
 
     # -- the one superstep loop ---------------------------------------------
 
-    def _make_body(self, program):
+    def _make_body(self, program, sync="barrier", gate=False):
         """Per-shard body: the whole iteration loop of one vertex program.
 
         Fixed-iteration programs (PageRank) compile to ``fori_loop``;
@@ -259,12 +341,31 @@ class Engine:
         change last superstep send the combiner identity, preserving the
         paper's "only send labels that changed" work skipping under XLA's
         static shapes (see DESIGN.md "Dynamic message sizes").
+
+        ``sync='overlap'`` relaxes the superstep barrier (DESIGN.md section
+        12): the loop carries the phase-1 partial as a second buffer, so
+        each iteration combines the PREVIOUS iteration's partial (phase 2)
+        while computing the next push (phase 1) from state the combine has
+        not yet touched -- the two halves share no data dependency and XLA
+        is free to overlap the collective with the local compute.  Updates
+        land with staleness 1; min-monoid label-correcting programs stay
+        convergent to the same fixpoint.  Termination switches to
+        double-check quiescence: two consecutive quiescent applies imply the
+        in-flight partial is the identity (the last push was built from an
+        empty frontier), so no improvement can still be pending.
+
+        ``gate`` enables frontier gating: shards whose live frontier blocks
+        miss their band source blocks skip phase 1 entirely (see
+        ``_push_closure``); skipped launches are counted per shard.
         """
         comb = program.combiner
 
         def body(arrs, aux, s0):
             arrs = {k: v[0] for k, v in arrs.items()}
             aux = {k: v[0] for k, v in aux.items()}
+            push = self._push_closure(program, gate, arrs)
+            p2 = lambda partial: self._phase2(partial, arrs, comb)
+            zero_sk = jnp.asarray(0, jnp.int32)
 
             def superstep(state, vals):
                 incoming = self._propagate(vals, arrs, comb,
@@ -277,39 +378,81 @@ class Engine:
                     0, program.fixed_iters,
                     lambda _, s: superstep(s, program.update(s, aux)), s0[0])
                 iters = jnp.asarray(program.fixed_iters, jnp.int32)
-            else:
+                skipped = zero_sk
+            elif sync == "overlap":
                 sent = jnp.asarray(comb.identity, s0.dtype)
+                part0, active0 = push(program.update(s0[0], aux),
+                                      jnp.ones((self._K,), bool))
 
                 def cond(carry):
-                    _, _, changed, it = carry
-                    return jnp.logical_and(changed, it < program.max_iters)
+                    _, _, _, quiet, it, _ = carry
+                    return jnp.logical_and(quiet < 2, it < program.max_iters)
 
                 def step(carry):
-                    state, frontier, _, it = carry
-                    # frontier masking: quiesced vertices send the identity
-                    vals = jnp.where(frontier, program.update(state, aux), sent)
-                    new = superstep(state, vals)
+                    state, frontier, pending, quiet, it, sk = carry
+                    incoming = p2(pending)
+                    vals = jnp.where(frontier, program.update(state, aux),
+                                     sent)
+                    new_pending, active = push(vals, frontier)
+                    new = program.apply(state, incoming, aux)
                     delta = new != state
                     changed = jax.lax.psum(
                         delta.any().astype(jnp.int32), AXIS) > 0
-                    return new, delta, changed, it + 1
+                    quiet = jnp.where(changed, 0, quiet + 1)
+                    return (new, delta, new_pending, quiet, it + 1,
+                            sk + 1 - active.astype(jnp.int32))
 
-                final, _, _, iters = jax.lax.while_loop(
+                # the seed push happens before the loop; the first in-loop
+                # frontier is empty so it is not pushed twice
+                final, _, _, _, iters, skipped = jax.lax.while_loop(
+                    cond, step,
+                    (s0[0], jnp.zeros((self._K,), bool), part0,
+                     jnp.asarray(0), jnp.asarray(0),
+                     zero_sk + 1 - active0.astype(jnp.int32)))
+            else:
+
+                def cond(carry):
+                    _, _, changed, it, _ = carry
+                    return jnp.logical_and(changed, it < program.max_iters)
+
+                def step(carry):
+                    state, frontier, _, it, sk = carry
+                    sent = jnp.asarray(comb.identity, s0.dtype)
+                    # frontier masking: quiesced vertices send the identity
+                    vals = jnp.where(frontier, program.update(state, aux),
+                                     sent)
+                    partial, active = push(vals, frontier)
+                    new = program.apply(state, p2(partial), aux)
+                    delta = new != state
+                    changed = jax.lax.psum(
+                        delta.any().astype(jnp.int32), AXIS) > 0
+                    return (new, delta, changed, it + 1,
+                            sk + 1 - active.astype(jnp.int32))
+
+                final, _, _, iters, skipped = jax.lax.while_loop(
                     cond, step, (s0[0], jnp.ones((self._K,), bool),
-                                 jnp.asarray(True), jnp.asarray(0)))
-            return final[None], jnp.full((1, self._K), iters, jnp.int32)
+                                 jnp.asarray(True), jnp.asarray(0), zero_sk))
+            # per-shard gating stats: (skipped launches, launch slots) --
+            # overlap runs one extra phase-1 slot (the pre-loop seed push)
+            slots = iters + (1 if (sync == "overlap"
+                                   and program.fixed_iters is None) else 0)
+            stats = jnp.stack([skipped, slots.astype(jnp.int32)])[None]
+            return (final[None], jnp.full((1, self._K), iters, jnp.int32),
+                    stats)
 
         return body
 
     # -- segmented loop (the replan path) -----------------------------------
 
-    def _make_segment_body(self, program):
+    def _make_segment_body(self, program, sync="barrier", gate=False):
         """Like ``_make_body`` but bounded: runs up to ``nsteps`` supersteps
-        and returns (state, frontier, executed) so the host can checkpoint,
-        replan, and resume.  One compiled segment serves every length (the
-        bound is a traced operand), and chaining segments reproduces the
-        whole-loop superstep sequence exactly -- same Jacobi order, same
-        frontier masking, same quiescence accounting.
+        and returns (state, frontier, executed, skipped) so the host can
+        checkpoint, replan, and resume.  One compiled segment serves every
+        length (the bound is a traced operand), and chaining segments
+        reproduces the whole-loop superstep sequence exactly -- same Jacobi
+        order, same frontier masking, same quiescence accounting.  Under
+        ``sync='overlap'`` every segment drains its in-flight partial before
+        returning, so replans only ever fire at drained sync points.
         """
         comb = program.combiner
         convergence = program.fixed_iters is None
@@ -317,50 +460,101 @@ class Engine:
         def body(arrs, aux, s0, f0, nsteps):
             arrs = {k: v[0] for k, v in arrs.items()}
             aux = {k: v[0] for k, v in aux.items()}
+            push = self._push_closure(program, gate, arrs)
+            p2 = lambda partial: self._phase2(partial, arrs, comb)
             sent = jnp.asarray(comb.identity, s0.dtype)
             limit = nsteps[0, 0]
+            zero_sk = jnp.asarray(0, jnp.int32)
 
-            def cond(carry):
-                _, _, changed, it = carry
-                return jnp.logical_and(changed, it < limit)
+            if convergence and sync == "overlap":
+                # the incoming frontier seeds the pipeline's first push; the
+                # loop then runs double-buffered and DRAINS before returning
+                # -- a replan at the segment boundary never sees an in-flight
+                # partial (the relabel would misroute it)
+                f_in = f0[0] != 0
+                part0, active0 = push(
+                    jnp.where(f_in, program.update(s0[0], aux), sent), f_in)
 
-            def step(carry):
-                state, frontier, _, it = carry
-                if convergence:
+                def cond(carry):
+                    _, _, _, quiet, it, _ = carry
+                    return jnp.logical_and(quiet < 2, it < limit)
+
+                def step(carry):
+                    state, frontier, pending, quiet, it, sk = carry
+                    incoming = p2(pending)
                     vals = jnp.where(frontier, program.update(state, aux),
                                      sent)
-                else:
-                    vals = program.update(state, aux)
-                incoming = self._propagate(vals, arrs, comb,
-                                           program.edge_value,
-                                           program.edge_semiring)
-                new = program.apply(state, incoming, aux)
-                delta = new != state
-                if convergence:
+                    new_pending, active = push(vals, frontier)
+                    new = program.apply(state, incoming, aux)
+                    delta = new != state
                     changed = jax.lax.psum(
                         delta.any().astype(jnp.int32), AXIS) > 0
-                else:
-                    changed = jnp.asarray(True)
-                return new, delta, changed, it + 1
+                    quiet = jnp.where(changed, 0, quiet + 1)
+                    return (new, delta, new_pending, quiet, it + 1,
+                            sk + 1 - active.astype(jnp.int32))
 
-            state, frontier, _, it = jax.lax.while_loop(
-                cond, step,
-                (s0[0], f0[0] != 0, jnp.asarray(True), jnp.asarray(0)))
+                state, frontier, pending, _, it, sk = jax.lax.while_loop(
+                    cond, step,
+                    (s0[0], jnp.zeros((self._K,), bool), part0,
+                     jnp.asarray(0), jnp.asarray(0),
+                     zero_sk + 1 - active0.astype(jnp.int32)))
+                # drain: fold the in-flight partial, keep its deltas in the
+                # frontier so the next segment re-pushes them
+                drained = program.apply(state, p2(pending), aux)
+                frontier = frontier | (drained != state)
+                state = drained
+            else:
+
+                def cond(carry):
+                    _, _, changed, it, _ = carry
+                    return jnp.logical_and(changed, it < limit)
+
+                def step(carry):
+                    state, frontier, _, it, sk = carry
+                    if convergence:
+                        vals = jnp.where(frontier, program.update(state, aux),
+                                         sent)
+                        partial, active = push(vals, frontier)
+                    else:
+                        vals = program.update(state, aux)
+                        partial, active = push(vals, jnp.ones((self._K,),
+                                                              bool))
+                    new = program.apply(state, p2(partial), aux)
+                    delta = new != state
+                    if convergence:
+                        changed = jax.lax.psum(
+                            delta.any().astype(jnp.int32), AXIS) > 0
+                    else:
+                        changed = jnp.asarray(True)
+                    return (new, delta, changed, it + 1,
+                            sk + 1 - active.astype(jnp.int32))
+
+                state, frontier, _, it, sk = jax.lax.while_loop(
+                    cond, step,
+                    (s0[0], f0[0] != 0, jnp.asarray(True), jnp.asarray(0),
+                     zero_sk))
+            slots = it + (1 if (convergence and sync == "overlap") else 0)
+            stats = jnp.stack([sk, slots.astype(jnp.int32)])[None]
             return (state[None], frontier.astype(jnp.int32)[None],
-                    jnp.full((1, 1), it, jnp.int32))
+                    jnp.full((1, 1), it, jnp.int32), stats)
 
         return body
 
-    def _run_segment(self, program, state, frontier, nsteps):
-        key = (program.key, "segment")
+    def _run_segment(self, program, state, frontier, nsteps, sync="barrier",
+                     gate=False):
+        key = (program.key, "segment", sync, gate)
         fn = self._compiled.get(key)
         if fn is None:
-            fn = jax.jit(self._smap(self._make_segment_body(program),
-                                    n_state_in=3, n_out=3))
+            fn = jax.jit(self._smap(self._make_segment_body(program, sync,
+                                                            gate),
+                                    n_state_in=3, n_out=4))
             self._compiled[key] = fn
         bound = jnp.full((self._C, 1), nsteps, jnp.int32)
-        state, frontier, it = fn(self.arrays, self.aux, state, frontier,
-                                 bound)
+        state, frontier, it, stats = fn(self.arrays, self.aux, state,
+                                        frontier, bound)
+        stats = np.asarray(jax.device_get(stats))
+        self._gate_skipped += int(stats[:, 0].sum())
+        self._gate_slots += int(stats[:, 1].sum())
         return state, frontier, int(jax.device_get(it)[0, 0])
 
     # -- batched multi-query execution (DESIGN.md section 11) ----------------
@@ -368,7 +562,8 @@ class Engine:
     def _smap_batch(self, body):
         """shard_map wrapper for the batched plane: state/frontier are
         [C, K, B] (chare-sharded on the leading axis, batch trailing), the
-        step bound [C, 1], outputs (state, frontier, per-query iters)."""
+        step bound [C, 1], outputs (state, frontier, per-query iters,
+        per-shard skipped launches)."""
         arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
                      for k, v in self.arrays.items()}
         aux_specs = {k: P(AXIS, None) for k in self.aux}
@@ -377,10 +572,10 @@ class Engine:
             in_specs=(arr_specs, aux_specs, P(AXIS, None, None),
                       P(AXIS, None, None), P(AXIS, None)),
             out_specs=(P(AXIS, None, None), P(AXIS, None, None),
-                       P(AXIS, None)),
+                       P(AXIS, None), P(AXIS, None)),
             check_vma=False)
 
-    def _make_batch_body(self, program):
+    def _make_batch_body(self, program, sync="barrier", gate=False):
         """The superstep loop over a [K, B] query plane, with PER-QUERY
         convergence masking and iteration counting.
 
@@ -402,44 +597,89 @@ class Engine:
             # aux planes are per-vertex [K]; expose them as [K, 1] so the
             # program's update/apply lambdas broadcast over the batch axis
             aux = {k: v[0][:, None] for k, v in aux.items()}
+            push = self._push_closure(program, gate, arrs)
+            p2 = lambda partial: self._phase2(partial, arrs, comb)
             sent = jnp.asarray(comb.identity, s0.dtype)
             limit = nsteps[0, 0]
             B = s0.shape[-1]
+            zero_sk = jnp.asarray(0, jnp.int32)
 
             def active_of(frontier):
                 # per-query "did anything change last step", across chares
                 return jax.lax.psum(
                     frontier.any(axis=0).astype(jnp.int32), AXIS) > 0
 
-            def cond(carry):
-                _, _, active, it, _ = carry
-                return jnp.logical_and(active.any(), it < limit)
+            if convergence and sync == "overlap":
+                # per-query double-check quiescence: a query stays active
+                # until TWO consecutive applies leave its column unchanged;
+                # ``q_it`` counts each query's own overlap supersteps
+                f_in = f0[0] != 0
+                part0, active0 = push(
+                    jnp.where(f_in, program.update(s0[0], aux), sent), f_in)
 
-            def step(carry):
-                state, frontier, active, it, q_it = carry
-                if convergence:
+                def cond(carry):
+                    _, _, _, q_quiet, it, _, _ = carry
+                    return jnp.logical_and((q_quiet < 2).any(), it < limit)
+
+                def step(carry):
+                    state, frontier, pending, q_quiet, it, q_it, sk = carry
+                    live = q_quiet < 2
+                    incoming = p2(pending)
                     vals = jnp.where(frontier, program.update(state, aux),
                                      sent)
-                else:
-                    vals = program.update(state, aux)
-                incoming = self._propagate(vals, arrs, comb,
-                                           program.edge_value,
-                                           program.edge_semiring)
-                new = program.apply(state, incoming, aux)
-                delta = new != state
-                changed = active_of(delta) if convergence \
-                    else jnp.ones((B,), bool)
-                return (new, delta, changed, it + 1,
-                        q_it + active.astype(jnp.int32))
+                    new_pending, active = push(vals, frontier)
+                    new = program.apply(state, incoming, aux)
+                    delta = new != state
+                    changed = active_of(delta)
+                    q_quiet = jnp.where(changed, 0, q_quiet + 1)
+                    return (new, delta, new_pending, q_quiet, it + 1,
+                            q_it + live.astype(jnp.int32),
+                            sk + 1 - active.astype(jnp.int32))
 
-            active0 = active_of(f0[0] != 0) if convergence \
-                else jnp.ones((B,), bool)
-            state, frontier, _, it, q_it = jax.lax.while_loop(
-                cond, step,
-                (s0[0], f0[0] != 0, active0, jnp.asarray(0),
-                 jnp.zeros((B,), jnp.int32)))
+                state, frontier, pending, _, it, q_it, sk = \
+                    jax.lax.while_loop(
+                        cond, step,
+                        (s0[0], jnp.zeros_like(f_in), part0,
+                         jnp.zeros((B,), jnp.int32), jnp.asarray(0),
+                         jnp.zeros((B,), jnp.int32),
+                         zero_sk + 1 - active0.astype(jnp.int32)))
+                drained = program.apply(state, p2(pending), aux)
+                frontier = frontier | (drained != state)
+                state = drained
+            else:
+
+                def cond(carry):
+                    _, _, active, it, _, _ = carry
+                    return jnp.logical_and(active.any(), it < limit)
+
+                def step(carry):
+                    state, frontier, active, it, q_it, sk = carry
+                    if convergence:
+                        vals = jnp.where(frontier,
+                                         program.update(state, aux), sent)
+                        partial, pushed = push(vals, frontier)
+                    else:
+                        vals = program.update(state, aux)
+                        partial, pushed = push(vals,
+                                               jnp.ones_like(f0[0] != 0))
+                    new = program.apply(state, p2(partial), aux)
+                    delta = new != state
+                    changed = active_of(delta) if convergence \
+                        else jnp.ones((B,), bool)
+                    return (new, delta, changed, it + 1,
+                            q_it + active.astype(jnp.int32),
+                            sk + 1 - pushed.astype(jnp.int32))
+
+                active0 = active_of(f0[0] != 0) if convergence \
+                    else jnp.ones((B,), bool)
+                state, frontier, _, it, q_it, sk = jax.lax.while_loop(
+                    cond, step,
+                    (s0[0], f0[0] != 0, active0, jnp.asarray(0),
+                     jnp.zeros((B,), jnp.int32), zero_sk))
+            slots = it + (1 if (convergence and sync == "overlap") else 0)
+            stats = jnp.stack([sk, slots.astype(jnp.int32)])[None]
             return (state[None], frontier.astype(jnp.int32)[None],
-                    q_it[None])
+                    q_it[None], stats)
 
         return body
 
@@ -460,19 +700,24 @@ class Engine:
                             and kv[0] in ("source", "sources", "pivots")))
         return key + (("batch", B),)
 
-    def _run_batch_segment(self, program, B, state, frontier, nsteps):
-        key = (self._batch_key(program, B), "segment")
+    def _run_batch_segment(self, program, B, state, frontier, nsteps,
+                           sync="barrier", gate=False):
+        key = (self._batch_key(program, B), "segment", sync, gate)
         fn = self._compiled.get(key)
         if fn is None:
-            fn = jax.jit(self._smap_batch(self._make_batch_body(program)))
+            fn = jax.jit(self._smap_batch(
+                self._make_batch_body(program, sync, gate)))
             self._compiled[key] = fn
         bound = jnp.full((self._C, 1), nsteps, jnp.int32)
-        state, frontier, q_it = fn(self.arrays, self.aux, state, frontier,
-                                   bound)
+        state, frontier, q_it, stats = fn(self.arrays, self.aux, state,
+                                          frontier, bound)
+        stats = np.asarray(jax.device_get(stats))
+        self._gate_skipped += int(stats[:, 0].sum())
+        self._gate_slots += int(stats[:, 1].sum())
         return state, frontier, np.asarray(jax.device_get(q_it))[0]
 
     def _run_batch_replanned(self, program, B, padded_sets, state, frontier,
-                             policy):
+                             policy, sync="barrier", gate=False):
         """Batched twin of ``_run_replanned``: the skew trigger sees the
         frontier collapsed over queries (a vertex is frontier-active if ANY
         query still touches it), and the state move carries the whole
@@ -484,7 +729,8 @@ class Engine:
         done, replans = 0, 0
         while done < limit:
             state, frontier, q_it = self._run_batch_segment(
-                program, B, state, frontier, min(policy.every, limit - done))
+                program, B, state, frontier, min(policy.every, limit - done),
+                sync, gate)
             q_iters += q_it
             # the longest-still-active query is active for every executed
             # superstep, so its count IS the segment's global step count
@@ -509,7 +755,8 @@ class Engine:
         return state, q_iters
 
     def run_batch(self, program, sources=None, batch=None, replan=None,
-                  **params) -> tuple[np.ndarray, np.ndarray]:
+                  sync="barrier", gate=None, **params
+                  ) -> tuple[np.ndarray, np.ndarray]:
         """Run B queries of one program in a single batched sweep.
 
         ``sources`` is a sequence of queries -- each an original vertex id
@@ -518,10 +765,13 @@ class Engine:
         plane width B (>= the query count); by default the count is rounded
         up to the next power of two (the B-bucket compile-cache policy).
         Padding columns re-run query 0 and are dropped on the way out.
+        ``sync``/``gate`` relax the superstep barrier exactly as in ``run``.
 
         Returns ``(plane, iters)``: ``plane[i]`` is query i's converged
         per-vertex state in original vertex order ([n, V]), ``iters[i]``
-        the supersteps query i needed (identical to its sequential count).
+        the supersteps query i needed (identical to its sequential count
+        under ``sync='barrier'``; the query's own double-check overlap count
+        under ``sync='overlap'``).
         """
         from repro.core import programs as prog_mod
 
@@ -533,6 +783,7 @@ class Engine:
             raise ValueError(
                 f"program {program.name!r} has no batched init "
                 f"(VertexProgram.init_batch); run it with Engine.run")
+        sync, gate = self._validate_async(program, sync, gate)
         if sources is None:
             sources = program.sources
         sets = prog_mod.seed_sets(sources)
@@ -545,12 +796,16 @@ class Engine:
         frontier = jnp.ones((self._C, self._K, B), jnp.int32)
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
+        self._gate_skipped = self._gate_slots = 0
         if replan is not None:
             state, q_it = self._run_batch_replanned(program, B, padded,
-                                                    state, frontier, replan)
+                                                    state, frontier, replan,
+                                                    sync, gate)
         else:
             state, _, q_it = self._run_batch_segment(program, B, state,
-                                                     frontier, limit)
+                                                     frontier, limit, sync,
+                                                     gate)
+        self._record_gate(sync, gate)
         # un-permute each query column to original vertex order (for grids,
         # g2l points at the column-0 replica slots)
         plane = np.asarray(jax.device_get(state)).reshape(
@@ -632,8 +887,16 @@ class Engine:
                 f"{shape[0] * shape[1]} chares, engine has {self._C}")
         return policy
 
-    def _run_replanned(self, program, policy) -> tuple[np.ndarray, int]:
-        """Segmented superstep driver with mid-run repartitioning."""
+    def _run_replanned(self, program, policy, sync="barrier", gate=False
+                       ) -> tuple[np.ndarray, int]:
+        """Segmented superstep driver with mid-run repartitioning.
+
+        Replans only ever fire at segment boundaries, and under
+        ``sync='overlap'`` each segment drains its in-flight double buffer
+        before returning (``_make_segment_body``), so the relabel never has
+        a partial to misroute: the overlap/replan interaction is safe by
+        construction.
+        """
         policy = self._resolve_replan_policy(policy)
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
@@ -642,7 +905,8 @@ class Engine:
         done, replans = 0, 0
         while done < limit:
             state, frontier, it = self._run_segment(
-                program, state, frontier, min(policy.every, limit - done))
+                program, state, frontier, min(policy.every, limit - done),
+                sync, gate)
             done += it
             f_host = np.asarray(jax.device_get(frontier))
             if program.fixed_iters is None and not f_host.any():
@@ -663,7 +927,46 @@ class Engine:
         final = np.asarray(jax.device_get(state)).reshape(-1)
         return final[self.pg.global_to_local], done
 
-    def run(self, program, replan=None, **params) -> tuple[np.ndarray, int]:
+    def _validate_async(self, program, sync, gate) -> tuple[str, bool]:
+        """Normalize/validate the barrier-relaxation knobs against the
+        program's algebra: overlap delivers stale reads, which only
+        label-correcting min-monoid convergence programs absorb; gating
+        needs a frontier, which only convergence programs maintain."""
+        if sync not in ("barrier", "overlap"):
+            raise ValueError(f"unknown sync mode {sync!r}; "
+                             "choose 'barrier' or 'overlap'")
+        if sync == "overlap" and (program.fixed_iters is not None
+                                  or program.combiner.name != "min"):
+            raise ValueError(
+                f"sync='overlap' needs a min-monoid convergence program "
+                f"(stale reads stay convergent only for label-correcting "
+                f"updates); {program.name!r} is not one")
+        if gate in (None, False, 0):
+            gate = False
+        elif gate in (True, "frontier"):
+            if program.fixed_iters is not None:
+                raise ValueError(
+                    f"gate='frontier' needs a convergence program (the gate "
+                    f"reads the frontier); {program.name!r} has fixed iters")
+            gate = True
+        else:
+            raise ValueError(f"unknown gate mode {gate!r}; "
+                             "choose None or 'frontier'")
+        return sync, gate
+
+    def _record_gate(self, sync, gate):
+        """Publish the run's launch accounting into ``self.dispatch`` --
+        per-shard phase-1 launch slots, how many the frontier gate skipped,
+        and the fraction (0.0 when gating is off or nothing was skipped)."""
+        slots, skipped = self._gate_slots, self._gate_skipped
+        self.dispatch["gate"] = {
+            "sync": sync, "enabled": gate, "launch_slots": slots,
+            "skipped_launches": skipped, "launched": slots - skipped,
+            "skipped_fraction": skipped / slots if slots else 0.0,
+        }
+
+    def run(self, program, replan=None, sync="barrier", gate=None,
+            **params) -> tuple[np.ndarray, int]:
         """Run a vertex program to completion; returns (state, iterations).
 
         ``program`` is a registered name (params forwarded to its factory)
@@ -672,6 +975,16 @@ class Engine:
         jitted segments and the placement may switch at segment boundaries
         (DESIGN.md section 9); without it the whole loop is one jitted
         program, exactly as before.
+
+        ``sync='overlap'`` relaxes the superstep barrier for min-monoid
+        convergence programs: phase 2 of superstep t overlaps phase 1 of
+        t+1 through a double-buffered partial, updates land with staleness
+        1, and termination uses double-check quiescence -- same fixpoint,
+        measured per-superstep time no longer pays the full barrier.
+        ``gate='frontier'`` skips the phase-1 push of shards whose live
+        frontier cannot reach their edges (band-block intersection test);
+        the launch accounting lands in ``self.dispatch['gate']``.  Both
+        compose with ``replan`` (segments drain before any relabel).
         """
         from repro.core import programs as prog_mod
 
@@ -688,26 +1001,60 @@ class Engine:
             # queries), matching what one batched sweep executes
             sets = prog_mod.seed_sets(program.sources)
             plane, q_it = self.run_batch(program, sources=program.sources,
-                                         replan=replan)
+                                         replan=replan, sync=sync, gate=gate)
             return (program.finalize(self.pg.graph, sets, plane),
                     int(q_it.max()))
 
+        sync, gate = self._validate_async(program, sync, gate)
+        self._gate_skipped = self._gate_slots = 0
         if replan is not None:
-            return self._run_replanned(program, replan)
+            out = self._run_replanned(program, replan, sync, gate)
+            self._record_gate(sync, gate)
+            return out
 
+        key = (program.key, sync, gate)
         s0 = jnp.asarray(program.init(self.pg))
-        fn = self._compiled.get(program.key)
+        fn = self._compiled.get(key)
         if fn is None:
             # the state buffer is consumed by the superstep loop: donate it
             # so the loop carry reuses its allocation (no-op on CPU)
-            fn = jax.jit(self._smap(self._make_body(program)),
+            fn = jax.jit(self._smap(self._make_body(program, sync, gate),
+                                    n_out=3),
                          donate_argnums=(2,) if _DONATE else ())
-            self._compiled[program.key] = fn
-        state, iters = fn(self.arrays, self.aux, s0)
+            self._compiled[key] = fn
+        state, iters, stats = fn(self.arrays, self.aux, s0)
+        stats = np.asarray(jax.device_get(stats))
+        self._gate_skipped += int(stats[:, 0].sum())
+        self._gate_slots += int(stats[:, 1].sum())
+        self._record_gate(sync, gate)
         # un-permute: padded-id state -> original vertex order (the relabel
         # invariant -- callers always see original ids; DESIGN.md sec. 7)
         state = jax.device_get(state).reshape(-1)[self.pg.global_to_local]
         return state, int(jax.device_get(iters)[0, 0])
+
+    def step_hlo(self, program, **params) -> str:
+        """Optimized HLO text of ONE compiled propagate superstep (phase 1
+        + phase 2 + apply, no iteration loop) -- the input to collective
+        wire-byte analysis (``repro.launch.hloanalysis.analyze``), which is
+        how the grouped-vs-full grid2d lowering comparison is *measured*
+        rather than only modeled (``cost.grid_collective_bytes``)."""
+        from repro.core import programs as prog_mod
+
+        if isinstance(program, str):
+            program = prog_mod.make_program(program, **params)
+        comb = program.combiner
+
+        def body(arrs, aux, s0):
+            arrs = {k: v[0] for k, v in arrs.items()}
+            aux = {k: v[0] for k, v in aux.items()}
+            incoming = self._propagate(program.update(s0[0], aux), arrs,
+                                       comb, program.edge_value,
+                                       program.edge_semiring)
+            return (program.apply(s0[0], incoming, aux)[None],)
+
+        s0 = jnp.asarray(program.init(self.pg))
+        fn = jax.jit(self._smap(body, n_out=1))
+        return fn.lower(self.arrays, self.aux, s0).compile().as_text()
 
     # -- thin per-algorithm wrappers ----------------------------------------
 

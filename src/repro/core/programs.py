@@ -133,14 +133,17 @@ def make_program(name: str, **params) -> VertexProgram:
 
 def run_parallel(graph: Graph, algorithm: str, num_pes: int = 1,
                  strategy: str = "sortdest", segment_fn=None, push_fn="auto",
-                 partitioner: str = "contiguous", replan=None, **params):
+                 partitioner: str = "contiguous", replan=None,
+                 sync: str = "barrier", gate=None, collectives: str = "auto",
+                 **params):
     """Partition + engine + run, in one call (tests and examples)."""
     from repro.core.engine import Engine
     from repro.core.graph import partition
 
     eng = Engine(partition(graph, num_pes, partitioner=partitioner),
-                 strategy=strategy, segment_fn=segment_fn, push_fn=push_fn)
-    return eng.run(algorithm, replan=replan, **params)
+                 strategy=strategy, segment_fn=segment_fn, push_fn=push_fn,
+                 collectives=collectives)
+    return eng.run(algorithm, replan=replan, sync=sync, gate=gate, **params)
 
 
 def _cache_key(name: str, params: dict) -> tuple:

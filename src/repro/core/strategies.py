@@ -32,6 +32,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 AXIS = "pe"
 
 _INT_SENTINEL = jnp.iinfo(jnp.int32).max
@@ -137,7 +139,42 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
 
 # --------------------------------------------------------------------------
 # Strategies (all called per-shard inside shard_map)
+#
+# Every strategy is split into two phases with a uniform signature:
+#
+#   phase1(vals, arrs, combiner, C, K, segment_fn=, edge_value=, push_fn=,
+#          edge_semiring=, grid_meta=)                      -> partial
+#   phase2(partial, arrs, combiner, C, K, segment_fn=, grid_meta=,
+#          collectives=)                                    -> incoming
+#
+# Phase 1 is the purely local half (gather + semiring transform + segment
+# combine -- no collectives); phase 2 is the collective combine.  The split
+# is what makes barrier relaxation possible: the engine can overlap phase 2
+# of superstep t with phase 1 of t+1 (``sync='overlap'``), and can gate
+# phase 1 behind a frontier test (``lax.cond``) while phase 2 -- which every
+# shard must enter, collectives being SPMD -- still runs unconditionally.
+# The classic entry points below compose the two phases unchanged.
 # --------------------------------------------------------------------------
+
+
+def reduction_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                     segment_fn=None, edge_value=None, push_fn=None,
+                     edge_semiring=None, grid_meta=None):
+    return _dense_contrib(vals, pg_arrays["src_local"], pg_arrays["dst_global"],
+                          pg_arrays["edge_valid"], pg_arrays["edge_weight"],
+                          combiner, num_chunks, chunk_size, segment_fn,
+                          edge_value, push_fn, pg_arrays["band"],
+                          edge_semiring)
+
+
+def reduction_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
+                     segment_fn=None, grid_meta=None, collectives="full"):
+    if combiner.name == "add":
+        full = jax.lax.psum(dense, AXIS)
+    else:
+        full = jax.lax.pmin(dense, AXIS)
+    me = jax.lax.axis_index(AXIS)
+    return jax.lax.dynamic_slice_in_dim(full, me * chunk_size, chunk_size)
 
 
 def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
@@ -148,17 +185,29 @@ def reduction(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None
     them; each chare then slices out its own chunk.  Wire bytes/device on a
     ring: ~2 * |V| -- twice sortdest, and memory is |V| *per chare*.
     """
-    dense = _dense_contrib(vals, pg_arrays["src_local"], pg_arrays["dst_global"],
-                           pg_arrays["edge_valid"], pg_arrays["edge_weight"],
-                           combiner, num_chunks, chunk_size, segment_fn,
-                           edge_value, push_fn, pg_arrays["band"],
-                           edge_semiring)
+    dense = reduction_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                             segment_fn, edge_value, push_fn, edge_semiring)
+    return reduction_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size)
+
+
+def sortdest_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                    segment_fn=None, edge_value=None, push_fn=None,
+                    edge_semiring=None, grid_meta=None):
+    return _dense_contrib(vals, pg_arrays["sd_src_local"],
+                          pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
+                          pg_arrays["sd_edge_weight"], combiner, num_chunks,
+                          chunk_size, segment_fn, edge_value, push_fn,
+                          pg_arrays["sd_band"], edge_semiring)
+
+
+def sortdest_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
+                    segment_fn=None, grid_meta=None, collectives="full"):
     if combiner.name == "add":
-        full = jax.lax.psum(dense, AXIS)
-    else:
-        full = jax.lax.pmin(dense, AXIS)
-    me = jax.lax.axis_index(AXIS)
-    return jax.lax.dynamic_slice_in_dim(full, me * chunk_size, chunk_size)
+        return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
+    blocks = dense.reshape((num_chunks, chunk_size) + dense.shape[1:])
+    got = jax.lax.all_to_all(blocks, AXIS, split_axis=0, concat_axis=0, tiled=True)
+    return jax.lax.reduce(got, jnp.asarray(combiner.identity, got.dtype),
+                          combiner.merge, (0,))
 
 
 def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
@@ -174,24 +223,36 @@ def sortdest(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     block per destination chunk + ``all_to_all`` + local merge -- identical
     wire volume.
     """
-    dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
-                           pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
-                           pg_arrays["sd_edge_weight"], combiner, num_chunks,
-                           chunk_size, segment_fn, edge_value, push_fn,
-                           pg_arrays["sd_band"], edge_semiring)
-    if combiner.name == "add":
-        return jax.lax.psum_scatter(dense, AXIS, scatter_dimension=0, tiled=True)
-    blocks = dense.reshape((num_chunks, chunk_size) + dense.shape[1:])
-    got = jax.lax.all_to_all(blocks, AXIS, split_axis=0, concat_axis=0, tiled=True)
-    return jax.lax.reduce(got, jnp.asarray(combiner.identity, got.dtype),
-                          combiner.merge, (0,))
+    dense = sortdest_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                            segment_fn, edge_value, push_fn, edge_semiring)
+    return sortdest_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size)
+
+
+def basic_phase1(vals, pw_arrays, combiner, num_chunks, chunk_size,
+                 segment_fn=None, edge_value=None, push_fn=None,
+                 edge_semiring=None, grid_meta=None):
+    # push_fn is part of the shared phase-1 signature but does not apply
+    # here: the receive side combines *already-gathered* payloads, so the
+    # Pallas route for this variant is the scatter-half segment_fn.
+    payload = _edge_transform(vals[pw_arrays["pb_src_local"]],
+                              pw_arrays["pb_weight"], edge_value)
+    return combiner.mask(payload, pw_arrays["pb_valid"])
+
+
+def basic_phase2(payload, pw_arrays, combiner, num_chunks, chunk_size,
+                 segment_fn=None, grid_meta=None, collectives="full"):
+    dst_l = pw_arrays["pb_dst_local"]
+    valid = pw_arrays["pb_valid"]
+    got_vals = jax.lax.all_to_all(payload, AXIS, 0, 0, tiled=True)
+    got_dst = jax.lax.all_to_all(dst_l, AXIS, 0, 0, tiled=True)
+    got_valid = jax.lax.all_to_all(valid, AXIS, 0, 0, tiled=True)
+    got_vals = combiner.mask(got_vals, got_valid)
+    flat = got_vals.reshape((-1,) + got_vals.shape[2:])  # keep any batch axis
+    return _segment(combiner, segment_fn, flat, got_dst.ravel(), chunk_size)
 
 
 def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
           edge_value=None, push_fn=None, edge_semiring=None):
-    # push_fn is part of the shared strategy signature but does not apply
-    # here: the receive side combines *already-gathered* payloads, so the
-    # Pallas route for this variant is the scatter-half segment_fn.
     """Paper's *basic* variant: point-to-point (dst, value) pair messages.
 
     No local combining: one (dst_local, value) pair per edge is bucketed by
@@ -201,34 +262,14 @@ def basic(vals, pw_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     the allocation/serialization overhead the paper observes for this variant
     shows up here as the padded pair buffers.
     """
-    src_l = pw_arrays["pb_src_local"]  # [C, Pmax]
-    dst_l = pw_arrays["pb_dst_local"]
-    valid = pw_arrays["pb_valid"]
-    payload = _edge_transform(vals[src_l], pw_arrays["pb_weight"], edge_value)
-    payload = combiner.mask(payload, valid)
-    got_vals = jax.lax.all_to_all(payload, AXIS, 0, 0, tiled=True)
-    got_dst = jax.lax.all_to_all(dst_l, AXIS, 0, 0, tiled=True)
-    got_valid = jax.lax.all_to_all(valid, AXIS, 0, 0, tiled=True)
-    got_vals = combiner.mask(got_vals, got_valid)
-    flat = got_vals.reshape((-1,) + got_vals.shape[2:])  # keep any batch axis
-    return _segment(combiner, segment_fn, flat, got_dst.ravel(), chunk_size)
+    payload = basic_phase1(vals, pw_arrays, combiner, num_chunks, chunk_size,
+                           segment_fn, edge_value)
+    return basic_phase2(payload, pw_arrays, combiner, num_chunks, chunk_size,
+                        segment_fn)
 
 
-def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-          edge_value=None, push_fn=None, edge_semiring=None):
-    """Paper's *pairs* variant: one buffer per ordered chare pair, no global
-    synchronization.  TPU-native form: a ring of ``ppermute`` hops where each
-    shard forwards a partially-combined block and folds in its own
-    contribution -- point-to-point, overlappable with compute, no tree/barrier.
-    Wire bytes/device: (P-1) * chunk_size (same as reduce-scatter), but
-    latency is P-1 hops -- the ring analogue of "managing P^2 buffers is
-    costly at small scale" shows up as hop latency.
-    """
-    dense = _dense_contrib(vals, pg_arrays["sd_src_local"],
-                           pg_arrays["sd_dst_global"], pg_arrays["sd_edge_valid"],
-                           pg_arrays["sd_edge_weight"], combiner, num_chunks,
-                           chunk_size, segment_fn, edge_value, push_fn,
-                           pg_arrays["sd_band"], edge_semiring)
+def pairs_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
+                 segment_fn=None, grid_meta=None, collectives="full"):
     blocks = dense.reshape((num_chunks, chunk_size) + dense.shape[1:])
     me = jax.lax.axis_index(AXIS)
     perm = [(k, (k + 1) % num_chunks) for k in range(num_chunks)]
@@ -246,8 +287,85 @@ def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     return jax.lax.fori_loop(0, num_chunks - 1, hop, init)
 
 
+def pairs(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
+          edge_value=None, push_fn=None, edge_semiring=None):
+    """Paper's *pairs* variant: one buffer per ordered chare pair, no global
+    synchronization.  TPU-native form: a ring of ``ppermute`` hops where each
+    shard forwards a partially-combined block and folds in its own
+    contribution -- point-to-point, overlappable with compute, no tree/barrier.
+    Wire bytes/device: (P-1) * chunk_size (same as reduce-scatter), but
+    latency is P-1 hops -- the ring analogue of "managing P^2 buffers is
+    costly at small scale" shows up as hop latency.
+    """
+    dense = sortdest_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                            segment_fn, edge_value, push_fn, edge_semiring)
+    return pairs_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size)
+
+
+def grid_groups(R, C):
+    """Static ``axis_index_groups`` for an R x C rectangle grid over shard
+    ids ``r*C + c``: column group c = the R shards {r*C+c}, row group r = the
+    C contiguous shards r*C..r*C+C-1."""
+    cols = [[r * C + c for r in range(R)] for c in range(C)]
+    rows = [[r * C + c for c in range(C)] for r in range(R)]
+    return cols, rows
+
+
+def grid2d_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                  segment_fn=None, edge_value=None, push_fn=None,
+                  edge_semiring=None, grid_meta=None):
+    R, C, Kc = grid_meta
+    return _dense_contrib(vals, pg_arrays["gr_src_local"],
+                          pg_arrays["gr_dst_col"], pg_arrays["gr_edge_valid"],
+                          pg_arrays["gr_edge_weight"], combiner, C, Kc,
+                          segment_fn, edge_value, push_fn,
+                          pg_arrays["gr_band"], edge_semiring)
+
+
+def grid2d_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
+                  segment_fn=None, grid_meta=None, collectives="grouped"):
+    R, C, Kc = grid_meta
+    m = pg_arrays["gr_row_to_col"]
+    ident = jnp.asarray(combiner.identity, dense.dtype)
+    if collectives == "full" or (R == 1 and C == 1):
+        # full-axis lowering: every rectangle reduces the whole [C*Kc]
+        # buffer -- O(V) wire regardless of grid shape
+        if combiner.name == "add":
+            full = jax.lax.psum(dense, AXIS)
+        else:
+            full = jax.lax.pmin(dense, AXIS)
+        # gather the combined column-space vector back into row-state order;
+        # padding slots (-1) get the identity, keeping quiesced padding inert
+        gathered = full[jnp.clip(m, 0)]
+        live = m >= 0
+        if gathered.ndim > live.ndim:  # batched plane: mask broadcasts over B
+            live = live[:, None]
+        return jnp.where(live, gathered, ident)
+    # column-group lowering (DESIGN.md section 12): reduce only the shard's
+    # own column slice within its column group -- O(Kc * (R-1)/R) -- then
+    # re-distribute along the row with a row-group reduce of the row-chunk
+    # state -- O(Kr * (C-1)/C).  Each vertex's column-combined value is held
+    # by exactly one column shard per row (identity elsewhere), so the
+    # row-group reduce is exact for add as well as min.
+    col_groups, row_groups = grid_groups(R, C)
+    me = jax.lax.axis_index(AXIS)
+    col = me % C
+    mine = jax.lax.dynamic_slice_in_dim(dense, col * Kc, Kc)
+    combined = compat.grouped_reduce(mine, AXIS, col_groups, combiner.name)
+    # scatter the column slice into row-state order: row slot k is owned by
+    # this shard's column iff its column-padded id lands in [col*Kc, col*Kc+Kc)
+    local = m - col * Kc
+    own = (m >= 0) & (local >= 0) & (local < Kc)
+    gathered = combined[jnp.clip(local, 0, Kc - 1)]
+    if gathered.ndim > own.ndim:  # batched plane: mask broadcasts over B
+        own = own[:, None]
+    rowvals = jnp.where(own, gathered, ident)
+    return compat.grouped_reduce(rowvals, AXIS, row_groups, combiner.name)
+
+
 def grid2d(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
-           edge_value=None, push_fn=None, edge_semiring=None, grid_meta=None):
+           edge_value=None, push_fn=None, edge_semiring=None, grid_meta=None,
+           collectives="grouped"):
     """Two-phase reduce over a 2-D edge grid (DESIGN.md section 10).
 
     One shard per rectangle ``(r, c)`` of an R x C grid; ``vals`` is the
@@ -257,36 +375,24 @@ def grid2d(vals, pg_arrays, combiner, num_chunks, chunk_size, segment_fn=None,
     (fused/staged push over the rectangle's narrow ``gr_band``), producing
     partial contributions in the COLUMN-padded destination space.  Phase 2
     is the column combine: a monoid reduction of the per-rectangle partials
-    along each grid column.  Expressed under SPMD as one full-axis
-    ``psum``/``pmin`` of the ``[C*Kc]`` buffer -- rectangles outside a
-    vertex's column contribute only the identity, so the full-axis combine
-    IS the per-column segment reduce, fused with the row broadcast that
-    gets every replica its next state.  Unlike every 1-D variant, nothing
+    along each grid column, then a row redistribution that gets every
+    replica its next state.  The default ``collectives='grouped'`` lowering
+    expresses that literally with ``axis_index_groups`` (column-scoped
+    reduce + row-group combine, O(Kc*(R-1)/R + Kr*(C-1)/C) wire bytes);
+    ``'full'`` keeps the original full-axis ``psum``/``pmin`` of the
+    ``[C*Kc]`` buffer (O(V) wire), where rectangles outside a vertex's
+    column contribute only the identity.  Unlike every 1-D variant, nothing
     edge-proportional ever goes on the wire: the payload is vertex-sized
     (see ``cost.wire_model``'s grid terms).
 
     ``grid_meta`` is the static (rows, cols, col_chunk_size) triple the
     engine binds via ``functools.partial``.
     """
-    R, C, Kc = grid_meta
-    dense = _dense_contrib(vals, pg_arrays["gr_src_local"],
-                           pg_arrays["gr_dst_col"], pg_arrays["gr_edge_valid"],
-                           pg_arrays["gr_edge_weight"], combiner, C, Kc,
-                           segment_fn, edge_value, push_fn,
-                           pg_arrays["gr_band"], edge_semiring)
-    if combiner.name == "add":
-        full = jax.lax.psum(dense, AXIS)
-    else:
-        full = jax.lax.pmin(dense, AXIS)
-    # gather the combined column-space vector back into row-state order;
-    # padding slots (-1) get the identity, keeping quiesced padding inert
-    m = pg_arrays["gr_row_to_col"]
-    gathered = full[jnp.clip(m, 0)]
-    live = m >= 0
-    if gathered.ndim > live.ndim:  # batched plane: mask broadcasts over B
-        live = live[:, None]
-    return jnp.where(live, gathered,
-                     jnp.asarray(combiner.identity, dense.dtype))
+    dense = grid2d_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
+                          segment_fn, edge_value, push_fn, edge_semiring,
+                          grid_meta)
+    return grid2d_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
+                         grid_meta=grid_meta, collectives=collectives)
 
 
 STRATEGIES = {
@@ -296,6 +402,32 @@ STRATEGIES = {
     "pairs": pairs,
     "grid2d": grid2d,
 }
+
+# The phase-split registry: name -> (phase1, phase2) with the uniform
+# signatures documented above.  ``pairs`` shares sortdest's phase 1 (same
+# sd layout + local combine); they differ only in how the blocks travel.
+PHASES = {
+    "reduction": (reduction_phase1, reduction_phase2),
+    "sortdest": (sortdest_phase1, sortdest_phase2),
+    "basic": (basic_phase1, basic_phase2),
+    "pairs": (sortdest_phase1, pairs_phase2),
+    "grid2d": (grid2d_phase1, grid2d_phase2),
+}
+
+
+def phase1_identity(strategy, vals, pg_arrays, combiner, num_chunks,
+                    chunk_size, grid_meta=None):
+    """An all-identity phase-1 partial of the right shape/dtype -- the
+    ``lax.cond`` false branch when frontier gating skips a shard's local
+    push.  Feeding it to phase 2 contributes nothing to any vertex."""
+    tail = vals.shape[1:]  # batched plane carries a trailing [B]
+    if strategy == "basic":
+        shape = pg_arrays["pb_src_local"].shape + tail
+    elif strategy == "grid2d":
+        shape = (grid_meta[1] * grid_meta[2],) + tail
+    else:
+        shape = (num_chunks * chunk_size,) + tail
+    return jnp.full(shape, combiner.identity, vals.dtype)
 
 # Strategies that read the pairwise (edge-bucketed) layout instead of the CSR.
 PAIRWISE = {"basic"}

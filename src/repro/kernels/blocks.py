@@ -132,6 +132,45 @@ def band_tiles(band: np.ndarray) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Frontier gating geometry (DESIGN.md section 12)
+# ---------------------------------------------------------------------------
+
+
+def band_source_mask(band: np.ndarray, num_src_blocks: int) -> np.ndarray:
+    """-> ``[C, num_src_blocks]`` 0/1 mask: which gather-side source blocks
+    each chare/rectangle's edges can read at all.
+
+    The union over edge blocks of the inclusive ``[src_lo, src_hi]`` band
+    ranges.  At runtime the engine reduces the live frontier to the same
+    BLOCK_V block granularity; a shard whose frontier blocks miss this mask
+    entirely can skip its whole phase-1 push (every gathered value is the
+    combiner identity), which is the rectangle-skipping test of
+    frontier-gated scheduling.  Conservative by construction: block overlap
+    without a live in-band vertex only costs a wasted launch, never a
+    missed contribution.
+    """
+    if band.ndim == 2:
+        band = band[None]
+    lo = band[:, 0, :]  # [C, NB]
+    hi = band[:, 1, :]
+    s = np.arange(num_src_blocks, dtype=np.int32)  # [nsb]
+    covered = (lo[:, :, None] <= s) & (s <= hi[:, :, None])  # [C, NB, nsb]
+    return covered.any(axis=1).astype(np.int32)
+
+
+def frontier_block_mask(frontier: np.ndarray, num_src_blocks: int
+                        ) -> np.ndarray:
+    """-> ``[num_src_blocks]`` 0/1 mask of BLOCK_V blocks holding any live
+    frontier vertex (host-side twin of the engine's on-device reduction,
+    used by the benchmark gating model)."""
+    K = frontier.shape[0]
+    pad = num_src_blocks * BLOCK_V - K
+    f = np.pad(frontier.astype(bool), (0, pad)) if pad else \
+        frontier.astype(bool)
+    return f.reshape(num_src_blocks, BLOCK_V).any(axis=1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # Staged-vs-fused dispatch cost (DESIGN.md section 9)
 # ---------------------------------------------------------------------------
 

@@ -58,6 +58,59 @@ def push_ref(vals, src, dst, valid, num_segments, combine="add", weight=None):
     return out
 
 
+def async_min_fixpoint_ref(src, dst, init, weight=None, max_stale=1,
+                           ages=None, seed=0, max_sweeps=10_000):
+    """Serial stale-read superstep simulator for min-monoid label correcting
+    (DESIGN.md section 12) -- the reference the barrier-relaxed engine modes
+    are property-tested against.
+
+    Sweep t relaxes every edge ``e`` reading ``history[t - age(t, e)]`` --
+    the source's state as of ``age`` sweeps ago, ``age <= max_stale`` drawn
+    per (sweep, edge) from ``seed`` unless an explicit ``[sweeps, E]``
+    ``ages`` schedule is given (age 0 reproduces synchronous Jacobi;
+    ``max_stale=1`` models the engine's double-buffered overlap).  The new
+    state is ``min(state, min_e relax(e))`` -- monotone non-increasing, so
+    stale reads only ever re-deliver values the fixpoint already absorbed.
+
+    Termination is the generalized double-check protocol: stop after
+    ``max_stale + 1`` consecutive quiescent sweeps.  States are monotone and
+    every read reaches at most ``max_stale`` sweeps back, so once nothing
+    changed for ``max_stale + 1`` sweeps every in-flight stale read equals
+    the current state and no further sweep can improve anything.
+
+    Returns ``(state, sweeps)``: the fixpoint (bit-exact vs synchronous
+    Bellman-Ford/BFS on the same edges) and the total sweeps executed
+    (including the quiescent tail the double check pays for).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    state = np.asarray(init).copy()
+    E = len(src)
+    w = None if weight is None else np.asarray(weight)
+    rng = np.random.default_rng(seed)
+    history = [state.copy()]  # history[t] = state entering sweep t
+    quiet = 0
+    sweeps = 0
+    while quiet <= max_stale and sweeps < max_sweeps:
+        if ages is not None:
+            age = np.asarray(ages[min(sweeps, len(ages) - 1)])
+        else:
+            age = rng.integers(0, max_stale + 1, size=E)
+        age = np.minimum(age, sweeps)  # no history before sweep 0
+        read = np.stack(history[-(max_stale + 1):], axis=0)  # [<=S+1, V]
+        vals = read[len(read) - 1 - age, src]  # stale source labels
+        relax = vals if w is None else vals + w
+        new = state.copy()
+        np.minimum.at(new, dst, relax)
+        sweeps += 1
+        quiet = quiet + 1 if np.array_equal(new, state) else 0
+        state = new
+        history.append(state.copy())
+        if len(history) > max_stale + 1:
+            history.pop(0)
+    return state, sweeps
+
+
 def betweenness_ref(graph, pivots):
     """Serial Brandes accumulation over the pivot set (numpy, no engine).
 

@@ -288,10 +288,13 @@ def test_engines_share_device_buffers_across_strategy_sweep():
     assert r1.arrays is r2.arrays  # basic layout shared the same way
     assert e1.aux is r1.aux
     # the sd engines never shipped the basic layout and vice versa
+    # (gate_blocks is the frontier-gating mask the engine derives from the
+    # layout's own band table and parks in the shared upload cache)
     assert set(e1.arrays) == {"sd_src_local", "sd_dst_global",
-                              "sd_edge_valid", "sd_edge_weight", "sd_band"}
+                              "sd_edge_valid", "sd_edge_weight", "sd_band",
+                              "gate_blocks"}
     assert set(r1.arrays) == {"src_local", "dst_global", "edge_valid",
-                              "edge_weight", "band"}
+                              "edge_weight", "band", "gate_blocks"}
     # pairwise layout cached the same way
     b1 = Engine(pg, strategy="basic")
     b2 = Engine(pg, strategy="basic")

@@ -178,6 +178,61 @@ def test_push_add_property(E, V, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
+# -- barrier-relaxed async execution (DESIGN.md section 12; deterministic
+# twins live in test_async.py) ------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(edges_strategy(max_n=25, max_e=120), st.integers(0, 3),
+       st.integers(0, 2 ** 31 - 1))
+def test_async_fixpoint_any_staleness(ne, max_stale, seed):
+    """Min-monoid label correcting under ANY bounded-staleness interleaving
+    converges to the bit-exact synchronous fixpoint (the safety half of the
+    engine's overlap mode): random graphs, random per-(sweep, edge) stale
+    ages drawn up to ``max_stale``, compared against age-0 Jacobi."""
+    n, edges = ne
+    src = np.array([e[0] for e in edges] or [0], np.int32)
+    dst = np.array([e[1] for e in edges] or [0], np.int32)
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 10, size=len(src)).astype(np.float32)
+    init = np.full(n, np.inf, np.float32)
+    init[seed % n] = 0.0
+    want, sync_sweeps = ref.async_min_fixpoint_ref(
+        src, dst, init, weight=w, max_stale=0)
+    got, sweeps = ref.async_min_fixpoint_ref(
+        src, dst, init, weight=w, max_stale=max_stale, seed=seed)
+    assert np.array_equal(got, want)
+    # staleness delays each relaxation by <= max_stale sweeps and the
+    # double-check tail pays max_stale extra quiescent sweeps
+    assert sweeps <= (max_stale + 1) * (sync_sweeps + 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 600).flatmap(
+    lambda n: st.tuples(st.just(n), st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=1, max_size=250))),
+    st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_gate_mask_is_conservative(ne, chunks, seed):
+    """Frontier gating soundness: when a chare's band source mask misses
+    every live frontier block, NO valid edge of that chare reads a frontier
+    vertex -- skipping its phase-1 push can only drop identity payloads."""
+    n, edges = ne
+    g = G.from_edges(n, np.array([e[0] for e in edges], np.int32),
+                     np.array([e[1] for e in edges], np.int32))
+    pg = G.partition(g, chunks)
+    nsb = max(-(-pg.chunk_size // blocks.BLOCK_V), 1)
+    gmask = blocks.band_source_mask(np.asarray(pg.sd_band), nsb)
+    rng = np.random.default_rng(seed)
+    for c in range(pg.num_chunks):
+        frontier = rng.integers(0, 2, size=pg.chunk_size).astype(np.int32)
+        fb = blocks.frontier_block_mask(frontier, nsb)
+        live = pg.sd_edge_valid[c] == 1
+        reads_frontier = frontier[pg.sd_src_local[c][live]].any()
+        if not (gmask[c] & fb).any():
+            assert not reads_frontier
+
+
 # -- optimizer compression ---------------------------------------------------
 
 
