@@ -170,6 +170,63 @@ def batched_cost_model(pg, B, layout="sd", weighted=False):
     }
 
 
+def streaming_cost_model(pg, windows=8):
+    """Bandwidth/compute roofline of the double-buffered window schedule
+    (DESIGN.md section 13): is each window's H2D copy hidden behind the
+    previous window's fused sweep on the modeled TPU?
+
+    Per window the pipeline overlaps copy(k+1) with compute(k), so the
+    steady-state superstep time is
+
+        t_pipe  = copy[0] + sum_k max(compute[k], copy[k+1]) + compute[-1]
+        t_serial = sum(copy) + sum(compute)
+
+    with copy = window_bytes / host_link_bw (PCIe-class infeed) and
+    compute = max(tiles * tile_flops / MXU, window_bytes / HBM_BW) -- the
+    same constants as ``batched_cost_model``.  ``hiding`` is the fraction
+    of the serialized schedule the pipeline removes (1 would mean copies
+    are free); ``crossover_intensity`` is the flops/byte a window must
+    sustain for compute to fully hide its own copy
+    (MXU_FLOPS / HOST_LINK_BW) next to the layout's measured intensity --
+    windows below the crossover are copy-bound and the streamed run pays
+    the host link, exactly the regime the measured ``overlap_efficiency``
+    in BENCH_cost.json's streaming section quantifies on this host.
+    """
+    HOST_LINK_BW = 16e9   # PCIe-class host->device infeed, bytes/s
+    HBM_BW, MXU_FLOPS = 819e9, 197e12
+    band = np.asarray(pg.gr_band)           # [P, 4, nb]
+    P, _, nb = band.shape
+    nbw = max(-(-nb // windows), 1)
+    tile_flops = 2 * BLOCK_E * BLOCK_V
+    per_block = P * BLOCK_E * 16 + P * 4 * 4  # src/dst/valid/weight + band
+    copy, comp = [], []
+    for k in range(0, nb, nbw):
+        blo, bhi = k, min(nb, k + nbw)
+        wbytes = (bhi - blo) * per_block
+        tiles = band_tiles(band[:, :, blo:bhi])
+        copy.append(wbytes / HOST_LINK_BW)
+        comp.append(max(tiles * tile_flops / MXU_FLOPS, wbytes / HBM_BW))
+    t_serial = sum(copy) + sum(comp)
+    t_pipe = copy[0] + sum(max(comp[i], copy[i + 1])
+                           for i in range(len(copy) - 1)) + comp[-1]
+    total_bytes = nb * per_block
+    total_tiles = band_tiles(band)
+    intensity = total_tiles * tile_flops / total_bytes
+    return {
+        "windows": len(copy),
+        "window_bytes": nbw * per_block,
+        "total_edge_bytes": total_bytes,
+        "copy_s": sum(copy),
+        "compute_s": sum(comp),
+        "pipelined_superstep_s": t_pipe,
+        "serialized_superstep_s": t_serial,
+        "hiding": 1.0 - t_pipe / t_serial if t_serial else 0.0,
+        "bound": "copy" if sum(copy) > sum(comp) else "compute",
+        "intensity_flops_per_byte": intensity,
+        "crossover_intensity": MXU_FLOPS / HOST_LINK_BW,
+    }
+
+
 def validate(E=4096, V=2048, seed=1, fused=True):
     """Max |err| of one push path vs the pure-jnp oracle (CI smoke)."""
     rng = np.random.default_rng(seed)

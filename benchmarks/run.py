@@ -22,6 +22,11 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
              supersteps, frontier-gate launch accounting (host model +
              measured 8-PE grid(2,4) run), and grouped-vs-full phase-2
              collective bytes from the compiled HLO (also in BENCH_cost.json)
+  streaming.* out-of-core rectangle streaming: resident vs streamed SSSP,
+             prefetch overlap efficiency + effective H2D edge bandwidth,
+             frontier-gated fetch skips, layout-cache cold/warm prep
+             speedup, and the bandwidth/compute pipeline roofline (also in
+             BENCH_cost.json)
   kernel.*   push-kernel validation + timing + staged/fused TPU cost model
   dispatch.* what push_fn='auto' chose per layout (fused on the power-law
              stand-in, staged on a near-uniform contrast graph)
@@ -214,6 +219,39 @@ def main():
          f"full={am['collective_bytes_measured']['full']:.3e} "
          f"model={am['collective_bytes_model']['ratio']:.3f} (HLO-measured)")
     cost_json["async"] = {"pe1": at, "gating_model": gm, "grid24_8pe": am}
+
+    # ---- out-of-core rectangle streaming (DESIGN.md section 13) ------------
+    stbl = tables.streaming_table(scale_log2=scale, repeats=repeats)
+    assert stbl["bit_exact"], "streamed SSSP diverged from resident"
+    emit("streaming.sssp.resident@1", f"{stbl['resident_s']:.4f}",
+         f"iters={stbl['iters']}")
+    emit("streaming.sssp.streamed@1", f"{stbl['streamed_s']:.4f}",
+         f"windows={stbl['windows']} "
+         f"edge_fraction_resident={stbl['edge_fraction_resident']:.3f}")
+    emit("streaming.sssp.superstep_s", f"{stbl['superstep_streamed_s']:.2e}",
+         f"resident={stbl['superstep_resident_s']:.2e} s/superstep")
+    emit("streaming.overlap_efficiency", f"{stbl['overlap_efficiency']:.3f}",
+         f"copy={stbl['copy_s']:.3f}s stall={stbl['stall_s']:.3f}s "
+         f"serialized={stbl['serialized_s']:.4f}s")
+    emit("streaming.edge_bandwidth",
+         f"{stbl['edge_bandwidth_bytes_per_s']:.3e}",
+         "effective H2D bytes/s through the window pipeline")
+    emit("streaming.gate_skip_fraction", f"{stbl['gate_skip_fraction']:.3f}",
+         "window fetches skipped under gate='frontier'")
+    emit("streaming.cache_prep_speedup", f"{stbl['cache_speedup']:.2f}",
+         f"cold={stbl['cache_cold_s']:.3f}s warm={stbl['cache_warm_s']:.3f}s "
+         "(mmap'd layout cache)")
+    sm = kernelbench.streaming_cost_model(
+        partition(load_dataset("soc-lj1-mini", scale_log2=scale,
+                               weighted=True), 1, "grid(1,1)"))
+    emit("streaming.model.hiding", f"{sm['hiding']:.3f}",
+         f"bound={sm['bound']} pipelined={sm['pipelined_superstep_s']:.2e}s "
+         f"serialized={sm['serialized_superstep_s']:.2e}s")
+    emit("streaming.model.crossover",
+         f"{sm['crossover_intensity']:.0f}",
+         f"flops/byte needed to hide the host link; layout sustains "
+         f"{sm['intensity_flops_per_byte']:.0f}")
+    cost_json["streaming"] = {**stbl, "model": sm}
 
     kernels_json = {
         "schema": 1,

@@ -329,6 +329,89 @@ def async_multidevice_metrics(scale_log2: int = 13) -> dict:
     return json.loads(line[len("RESULTS "):])
 
 
+def streaming_table(scale_log2: int = 13, repeats: int = 3, windows: int = 8,
+                    dskey: str = "soc-lj1-mini") -> dict:
+    """Measured out-of-core streaming vs the resident engine at grid(1,1)
+    (DESIGN.md section 13): whole-run and per-superstep seconds, the
+    prefetcher's overlap efficiency and effective H2D edge bandwidth, the
+    frontier gate's fetch-skip fraction, and the layout cache's cold/warm
+    prep speedup.  SSSP is the probe program (min monoid: the streamed run
+    must be bit-exact with identical iteration counts).
+    """
+    import shutil
+    import tempfile
+    import time
+
+    import numpy as np
+
+    from repro.core import StreamConfig
+
+    spec = get_spec("sssp")
+    g = load_dataset(dskey, scale_log2=scale_log2, weighted=spec.weighted)
+    g = spec.prepare_graph(g)
+
+    eng_r = Engine(partition(g, 1, "grid(1,1)"))
+    out_r, it_r = eng_r.run("sssp", source=0)
+    t_res = bench(lambda: eng_r.run("sssp", source=0), repeats)
+
+    eng_s = Engine(partition(g, 1, "grid(1,1)"), residency="stream",
+                   stream=StreamConfig(windows=windows))
+    out_s, it_s = eng_s.run("sssp", source=0)
+    bit_exact = bool(np.array_equal(np.asarray(out_r), np.asarray(out_s)))
+    t_str, best_overlap, st = float("inf"), 0.0, None
+    for _ in range(repeats):  # dispatch holds the LAST run: track the best
+        t0 = time.perf_counter()
+        eng_s.run("sssp", source=0)
+        t_str = min(t_str, time.perf_counter() - t0)
+        d = eng_s.dispatch["stream"]
+        if d["overlap_efficiency"] >= best_overlap:
+            best_overlap, st = d["overlap_efficiency"], dict(d)
+
+    # serialized baseline: same schedule, no prefetch thread
+    eng_0 = Engine(partition(g, 1, "grid(1,1)"), residency="stream",
+                   stream=StreamConfig(windows=windows, prefetch=False))
+    t_ser = bench(lambda: eng_0.run("sssp", source=0), repeats)
+
+    eng_s.run("sssp", source=0, gate="frontier")
+    skip = eng_s.dispatch["stream"]["fetch_skip_fraction"]
+
+    # layout cache: cold build+persist vs warm mmap, best-of-repeats
+    cache = tempfile.mkdtemp(prefix="layout_cache_bench_")
+    try:
+        t_cold = t_warm = float("inf")
+        for _ in range(repeats):
+            shutil.rmtree(cache, ignore_errors=True)
+            t0 = time.perf_counter()
+            partition(g, 1, "grid(1,1)",
+                      eager=False).shard_source(windows=windows,
+                                                cache_dir=cache)
+            t_cold = min(t_cold, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            sb = partition(g, 1, "grid(1,1)",
+                           eager=False).shard_source(windows=windows,
+                                                     cache_dir=cache)
+            t_warm = min(t_warm, time.perf_counter() - t0)
+            assert sb.origin == "disk"
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+    return {
+        "graph": dskey, "algo": "sssp", "windows": st["windows"],
+        "iters": it_s, "bit_exact": bit_exact and it_s == it_r,
+        "resident_s": t_res, "streamed_s": t_str, "serialized_s": t_ser,
+        "superstep_resident_s": t_res / max(it_r, 1),
+        "superstep_streamed_s": t_str / max(it_s, 1),
+        "overlap_efficiency": best_overlap,
+        "copy_s": st["copy_s"], "stall_s": st["stall_s"],
+        "edge_bandwidth_bytes_per_s": st["edge_bandwidth_bytes_per_s"],
+        "edge_fraction_resident": st["edge_fraction_resident"],
+        "total_edge_bytes": st["total_edge_bytes"],
+        "gate_skip_fraction": skip,
+        "cache_cold_s": t_cold, "cache_warm_s": t_warm,
+        "cache_speedup": t_cold / t_warm if t_warm > 0 else float("inf"),
+    }
+
+
 def imbalance_table(scale_log2: int = 13, pe_counts=(8,), partitioners=None):
     """Per-chare load skew per placement policy -- the paper's imbalance
     observation as a measurable table.

@@ -1,2 +1,4 @@
 from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    latest_step, AsyncCheckpointer)
+                                    latest_step, AsyncCheckpointer,
+                                    layout_fingerprint, save_layout_cache,
+                                    open_layout_cache, LAYOUT_CACHE_VERSION)

@@ -1,10 +1,16 @@
-"""Checkpoint store: mesh-agnostic, atomic, async-capable.
+"""Checkpoint store: mesh-agnostic, atomic, async-capable -- plus the disk
+layout cache the streamed execution mode reads shards from.
 
 Layout (one directory per step):
     <dir>/step_000100/
         arrays.npz        every pytree leaf, keyed by '/'-joined path
-        meta.json         {"step": 100, "tree": <structure descriptor>}
+        meta.json         {"step": 100, "keys": [<sorted leaf keys>]}
     <dir>/step_000100.tmp_*   (staging; atomically renamed on completion)
+
+``meta.json`` records the sorted leaf-key list (the flat '/'-joined paths of
+``arrays.npz``); restore validates the requested structure against it up
+front, so a mismatched tree fails with one error naming every missing leaf
+instead of a per-leaf ``KeyError`` halfway through placement.
 
 Design decisions for 1000-node operation (scaled-down faithfully here):
   * **Mesh-agnostic**: leaves are saved *unsharded logical* (device_get of
@@ -18,8 +24,19 @@ Design decisions for 1000-node operation (scaled-down faithfully here):
     leaves garbage that is ignored and GC'd on the next save.
   * **Async**: ``AsyncCheckpointer`` snapshots to host memory synchronously
     (cheap) and writes in a background thread, overlapping I/O with the next
-    training steps; ``wait()`` joins before the next save or at exit.
+    training steps; ``wait()`` joins before the next save or at exit and
+    re-raises anything the writer thread died on.
   * **Self-pruning**: keeps the most recent ``keep`` checkpoints.
+
+Layout cache (DESIGN.md section 13): the same atomic-directory protocol
+persists *edge-layout builds* across processes -- one entry per content
+fingerprint (graph bytes + partitioner + chare count + layout name), one
+plain ``.npy`` per array so ``open_layout_cache`` can hand back
+memory-mapped views without materializing gigabytes of host memory.  A PE
+or strategy sweep pays the radix sort + rectangle pack once; every later
+run -- and the streamed engine's ``ShardSource`` -- reads windows straight
+out of the mapped files.  Stale entries (the graph or the partitioner
+changed) miss on fingerprint and are rebuilt, never silently reused.
 """
 
 from __future__ import annotations
@@ -128,12 +145,22 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None,
         flat = {k: z[k] for k in z.files}
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    keyed = [("/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in pth), leaf) for pth, leaf in leaves]
+
+    # Validate the requested structure against meta.json's key list before
+    # touching any leaf: one error naming everything that's absent.
+    with open(os.path.join(path, "meta.json")) as f:
+        stored = set(json.load(f).get("keys", flat))
+    missing = sorted(k for k, _ in keyed if k not in stored)
+    if missing:
+        raise KeyError(f"checkpoint {path} missing {len(missing)} leaves: "
+                       f"{missing}")
+
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(leaves))
     out = []
-    for (pth, leaf), shard in zip(leaves, shard_leaves):
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-                       for p in pth)
+    for (key, leaf), shard in zip(keyed, shard_leaves):
         if key not in flat:
             raise KeyError(f"checkpoint {path} missing leaf {key!r}")
         dt_key = "__dtype__/" + key
@@ -148,12 +175,18 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None,
 
 
 class AsyncCheckpointer:
-    """Snapshot-now, write-later checkpointing (overlaps I/O with training)."""
+    """Snapshot-now, write-later checkpointing (overlaps I/O with training).
+
+    A failure in the background writer is captured and re-raised from the
+    *next* ``wait()`` or ``save()`` -- a dead daemon thread must not turn a
+    lost checkpoint into a silent success.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def save(self, step: int, tree):
         self.wait()
@@ -172,9 +205,9 @@ class AsyncCheckpointer:
                     shutil.rmtree(final)
                 os.replace(tmp, final)
                 _gc(self.directory, self.keep)
-            except BaseException:
+            except BaseException as e:
                 shutil.rmtree(tmp, ignore_errors=True)
-                raise
+                self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -183,3 +216,91 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+# ---------------------------------------------------------------------------
+# Disk layout cache (streamed execution + PE/strategy sweeps).
+# ---------------------------------------------------------------------------
+
+# Bump whenever the layout build changes meaning (sort key, packing, band
+# conventions) so old cache entries miss instead of poisoning new runs.
+LAYOUT_CACHE_VERSION = 1
+
+
+def layout_fingerprint(graph, partitioner: str, num_chunks: int,
+                       which: str) -> str:
+    """Content hash of one edge-layout build.
+
+    Covers the graph bytes (indptr/dst/weight), the partitioner spec string
+    (grid shape and policy parameters included), the chare count, the layout
+    name, and ``LAYOUT_CACHE_VERSION``. Any change to any input produces a
+    different fingerprint, so a stale entry can never be returned for a
+    changed graph or partitioner.
+    """
+    import hashlib
+    h = hashlib.sha256()
+    h.update(f"v{LAYOUT_CACHE_VERSION}|{partitioner}|{int(num_chunks)}|"
+             f"{which}|{graph.num_vertices}|{int(graph.directed)}".encode())
+    h.update(np.ascontiguousarray(graph.indptr).tobytes())
+    h.update(np.ascontiguousarray(graph.dst).tobytes())
+    if graph.weight is not None:
+        h.update(np.ascontiguousarray(graph.weight).tobytes())
+    return h.hexdigest()
+
+
+def _layout_entry(directory: str, fingerprint: str) -> str:
+    return os.path.join(directory, f"layout_{fingerprint[:16]}")
+
+
+def save_layout_cache(directory: str, fingerprint: str,
+                      arrays: dict[str, np.ndarray]) -> str:
+    """Atomically persist one layout build; returns the entry path.
+
+    One plain ``.npy`` per array (never ``.npz``: zip members can't be
+    memory-mapped), staged in a tmp dir and ``os.replace``d into place --
+    the same crash-safety protocol as the checkpoint writer.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = _layout_entry(directory, fingerprint)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(final) + ".tmp_",
+                           dir=directory)
+    try:
+        for name, arr in arrays.items():
+            np.save(os.path.join(tmp, f"{name}.npy"),
+                    np.ascontiguousarray(arr))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"fingerprint": fingerprint,
+                       "keys": sorted(arrays)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def open_layout_cache(directory: str, fingerprint: str):
+    """Return ``{name: memory-mapped array}`` for an exact fingerprint hit.
+
+    ``None`` on miss (no entry -- a changed graph or partitioner lands here
+    because its fingerprint names a different entry). An entry whose stored
+    fingerprint does not match the requested one (truncated-prefix
+    collision, tampered or torn entry) raises ``ValueError`` rather than
+    returning wrong shards.
+    """
+    path = _layout_entry(directory, fingerprint)
+    meta_path = os.path.join(path, "meta.json")
+    if not os.path.exists(meta_path):
+        return None
+    with open(meta_path) as f:
+        meta = json.load(f)
+    if meta.get("fingerprint") != fingerprint:
+        raise ValueError(f"layout cache entry {path} is stale: stored "
+                         f"fingerprint {meta.get('fingerprint')!r} != "
+                         f"requested {fingerprint!r}")
+    return {k: np.load(os.path.join(path, f"{k}.npy"), mmap_mode="r")
+            for k in meta["keys"]}

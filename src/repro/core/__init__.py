@@ -11,15 +11,17 @@ Public API:
     run_cost / wire_model                   repro.core.cost
 """
 
-from repro.core.graph import (Graph, PartitionedGraph, from_edges, partition,
-                              rmat, erdos_renyi, ring, two_cliques,
-                              random_weights, load_dataset, dataset_names)
+from repro.core.graph import (Graph, PartitionedGraph, ShardSource,
+                              from_edges, partition, rmat, erdos_renyi, ring,
+                              two_cliques, random_weights, load_dataset,
+                              dataset_names)
 from repro.core.partitioners import (GridPlan, PartitionPlan, PartitionerSpec,
                                      get_partitioner, grid_shape, make_plan,
                                      partition_stats, partitioner_names,
                                      policy_label, register_partitioner,
                                      row_plan_of)
-from repro.core.engine import Engine, ReplanPolicy, make_pe_mesh
+from repro.core.engine import (Engine, ReplanPolicy, StreamConfig,
+                               make_pe_mesh)
 from repro.core.programs import (VertexProgram, ProgramSpec, make_program,
                                  get_spec, registered_names, run_parallel,
                                  sssp_serial, bfs_serial,

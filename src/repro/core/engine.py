@@ -32,12 +32,16 @@ Two adaptive layers ride on top (DESIGN.md section 9):
 
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
@@ -101,6 +105,153 @@ class ReplanPolicy:
 
 
 @dataclasses.dataclass
+class StreamConfig:
+    """Sizing and placement knobs for ``residency="stream"`` (DESIGN.md
+    section 13).
+
+    Exactly one of ``windows`` / ``budget_bytes`` sizes the edge windows:
+    ``windows`` asks for that many sweeps per superstep, ``budget_bytes``
+    caps the DEVICE-resident edge working set (two staging windows -- the
+    double buffer) and derives the widest window that fits.  ``cache_dir``
+    points shard reads at the on-disk layout cache
+    (``checkpoint.save_layout_cache``): the edge planes are memory-mapped
+    and never fully materialized in host RAM either.  ``prefetch=False``
+    serializes fetch and compute (the no-overlap baseline the measured
+    overlap efficiency is defined against).
+    """
+
+    windows: int | None = None
+    budget_bytes: int | None = None
+    cache_dir: str | None = None
+    prefetch: bool = True
+
+    def __post_init__(self):
+        if self.windows is not None and self.budget_bytes is not None:
+            raise ValueError("pass windows OR budget_bytes, not both")
+        if self.windows is not None and self.windows < 1:
+            raise ValueError("windows must be >= 1")
+
+
+class _StreamPrefetcher:
+    """Double-buffered host->device pipeline for edge-window shards.
+
+    Two recycled host staging slots and one worker thread.  While the jitted
+    fold of window k runs, the worker slices window k+1 out of the (possibly
+    memory-mapped) ``ShardSource`` into a staging slot -- pure numpy work
+    whose memcpy releases the GIL, so it hides behind dispatched compute.
+    The device transfer itself happens in ``take()`` on the consumer thread
+    as an ASYNC ``jax.device_put`` enqueue: XLA materializes it on its own
+    schedule, in queue order ahead of the window fold that consumes it.
+    Blocking inside the worker would instead serialize on the whole device
+    queue (on the CPU backend a transfer only reports ready once the queue
+    drains past it), which is exactly the stall the pipeline exists to hide.
+
+    Slot recycling: ``device_put`` may read the staging buffer LAZILY (the
+    transfer can materialize as late as the consuming computation), so a
+    slot is only safe to overwrite once the fold that consumed its previous
+    window has EXECUTED.  The caller threads that dependency through
+    ``submit(after=...)``: the win output of the slot's previous consumer.
+    Waiting on it is classic depth-2 pipeline backpressure -- the worker
+    never runs more than two windows ahead of device execution, which also
+    bounds the in-flight transfer memory to the double buffer.
+
+    Accounting: ``copy_s`` is data-movement work (staging read + transfer
+    enqueue); ``stall_s`` is the share of it the COMPUTE pipeline was
+    exposed to.  A consumer wait is a stall only if the device had nothing
+    left to execute meanwhile -- attribution samples the last dispatched
+    fold's non-blocking ``is_ready()`` at both ends of the wait (busy both
+    ends: fully hidden; busy one end: half; idle: fully exposed).  Worker
+    backpressure waits are excluded outright (the pipeline running AHEAD of
+    execution is not a data stall).  Overlap efficiency = 1 - stall/copy;
+    it measures the pipeline's structure -- on hardware where transfers and
+    compute use disjoint resources (TPU DMA engines) it equals the
+    wall-clock hiding.  ``pipelined=False`` performs the read inside
+    ``take()`` and charges it in full (stall == copy): the serialized
+    baseline with identical code.
+    """
+
+    def __init__(self, source, shardings, pipelined=True):
+        self.source = source
+        self.shardings = shardings
+        self.pipelined = pipelined
+        self._pool = [source.make_staging(), source.make_staging()]
+        self._seq = 0
+        self._pending = collections.deque()
+        self._ex = (concurrent.futures.ThreadPoolExecutor(max_workers=1)
+                    if pipelined else None)
+        self.copy_s = 0.0
+        self.stall_s = 0.0
+        self.bytes_read = 0
+        self.fetches = 0
+        self.compute = None  # the most recently dispatched fold's output:
+        #                      its readiness is the device-busy probe
+
+    @property
+    def next_slot(self):
+        return self._seq % 2
+
+    def _device_busy(self):
+        if self.compute is None:
+            return False
+        try:
+            return not self.compute.is_ready()
+        except (AttributeError, RuntimeError):
+            return False
+
+    def _read(self, k, slot, active, after):
+        bp = 0.0
+        if after is not None:
+            # backpressure, not copy work: wait until the fold that consumed
+            # this slot's previous window has run (its transfer materialized)
+            t0 = time.perf_counter()
+            jax.block_until_ready(after)
+            bp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        nbytes = self.source.read_window(k, self._pool[slot], active)
+        return slot, nbytes, time.perf_counter() - t0, bp
+
+    def submit(self, k, active, after=None):
+        slot = self._seq % 2
+        self._seq += 1
+        if self._ex is not None:
+            self._pending.append(self._ex.submit(self._read, k, slot,
+                                                 active, after))
+        else:
+            self._pending.append((k, slot, active, after))
+
+    def take(self):
+        """-> (device window dict, slot): the next window, transfer enqueued."""
+        item = self._pending.popleft()
+        if self._ex is not None:
+            busy0 = self._device_busy()
+            t0 = time.perf_counter()
+            slot, nbytes, dt_read, bp = item.result()
+            wait = max(0.0, time.perf_counter() - t0 - bp)
+            busy1 = self._device_busy()
+            # device-busy attribution: the wait only stalls the pipeline to
+            # the extent the device ran dry during it
+            self.stall_s += wait * (0.0 if busy0 and busy1
+                                    else 0.5 if busy0 or busy1 else 1.0)
+        else:
+            slot, nbytes, dt_read, _ = self._read(*item)
+            self.stall_s += dt_read
+        t1 = time.perf_counter()
+        dev = {name: jax.device_put(buf, self.shardings[name])
+               for name, buf in self._pool[slot].items()}
+        put = time.perf_counter() - t1
+        self.copy_s += dt_read + put
+        if self._ex is None or not self._device_busy():
+            self.stall_s += put
+        self.bytes_read += nbytes
+        self.fetches += 1
+        return dev, slot
+
+    def close(self):
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+
+
+@dataclasses.dataclass
 class Engine:
     """Runs vertex programs on a partitioned graph with a chosen strategy.
 
@@ -124,10 +275,24 @@ class Engine:
     #                           whole gather/transform/combine loop
     collectives: str = "auto"  # grid2d phase-2 lowering: 'auto' (grouped),
     #                            'grouped' (axis_index_groups), 'full'
+    residency: str = "resident"  # 'resident' (edge planes live on device) |
+    #                              'stream' (windowed host->device pipeline)
+    stream: StreamConfig | None = None
 
     def __post_init__(self):
         if self.collectives not in ("auto", "grouped", "full"):
             raise ValueError(f"unknown collectives mode {self.collectives!r}")
+        if self.residency not in ("resident", "stream"):
+            raise ValueError(f"unknown residency {self.residency!r}; "
+                             "choose 'resident' or 'stream'")
+        if self.residency == "stream" and not self.pg.is_grid:
+            raise ValueError(
+                "residency='stream' needs a grid(R,C) partition -- the "
+                "window schedule walks edge rectangles (use grid(1,1) for "
+                "a single PE)")
+        if self.stream is not None and self.residency != "stream":
+            raise ValueError("stream config given but residency is "
+                             f"{self.residency!r}")
         if self.strategy not in strat.STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {sorted(strat.STRATEGIES)}")
@@ -156,12 +321,25 @@ class Engine:
         # the strategy tracks the partition's dimensionality: rectangles run
         # the two-phase reduce, 1-D placements the requested variant
         self.strategy = "grid2d" if pg.is_grid else self._strategy_request
+        self._source = None
         # layouts are uploaded once per PartitionedGraph and shared: engines
         # built on the same partition (a strategy sweep) alias the same
         # device buffers instead of re-transferring them per Engine; only
         # the strategy's own layout is materialized and shipped (a replan
         # never builds or uploads the edge order it will not run)
-        if self.strategy in strat.PAIRWISE:
+        if self.residency == "stream":
+            # out-of-core: only the per-vertex planes and the row->col
+            # gather map become device-resident; the [P, Emax] edge planes
+            # stay in host memory (or on disk, memory-mapped) and reach the
+            # device one double-buffered window at a time.  The source is
+            # built FIRST so a layout cache hit feeds the band table below
+            # from the memory-mapped entry instead of a fresh host build.
+            cfg = self.stream or StreamConfig()
+            self._source = pg.shard_source(windows=cfg.windows,
+                                           budget_bytes=cfg.budget_bytes,
+                                           cache_dir=cfg.cache_dir)
+            self.arrays = {"gr_row_to_col": jnp.asarray(pg.gr_row_to_col)}
+        elif self.strategy in strat.PAIRWISE:
             self.arrays = self.pg.device_pairwise()
         else:
             self.arrays = self.pg.device_arrays(
@@ -202,6 +380,22 @@ class Engine:
             self.arrays["gate_blocks"] = jnp.asarray(gmask)
         self.dispatch = self._resolve_dispatch()
         self.dispatch["collectives"] = self._collectives
+        self.dispatch["residency"] = self.residency
+        if self._source is not None:
+            sb = self._source
+            cfg = self.stream or StreamConfig()
+            self.dispatch["stream"] = {
+                "windows": sb.num_windows,
+                "blocks_per_window": sb.blocks_per_window,
+                "window_bytes": sb.window_bytes,
+                # the device-resident edge working set: two staging windows
+                "resident_edge_bytes": 2 * sb.window_bytes,
+                "total_edge_bytes": sb.total_edge_bytes,
+                "edge_fraction_resident":
+                    2 * sb.window_bytes / sb.total_edge_bytes,
+                "budget_bytes": cfg.budget_bytes,
+                "origin": sb.origin,
+            }
         self._compiled = {}  # program.key -> jitted fn; timing must not
         #                      rebuild the closure (COST times compute only)
 
@@ -557,6 +751,186 @@ class Engine:
         self._gate_slots += int(stats[:, 1].sum())
         return state, frontier, int(jax.device_get(it)[0, 0])
 
+    # -- streamed execution (residency='stream', DESIGN.md section 13) -------
+
+    def _stream_fns(self, program):
+        """Compile (once per program) the three jitted shard_map pieces of
+        the streamed superstep: ``prep`` (frontier-masked update -> vals),
+        ``win`` (fold ONE edge window's phase-1 contribution into the
+        running partial), ``apply`` (phase 2 + program apply + the
+        convergence/frontier summaries the host loop steers by).
+
+        The win outputs double as the prefetcher's backpressure handles
+        (``_StreamPrefetcher``), so the partial chain is NOT donated -- the
+        accumulator recycling lives at the kernel level instead (the fused
+        push's ``init=`` seed, ``kernels.ops.push``).
+        """
+        key = (program.key, "stream")
+        fns = self._compiled.get(key)
+        if fns is not None:
+            return fns
+        from repro.kernels import blocks as blk
+
+        comb = program.combiner
+        aux_specs = {k: P(AXIS, None) for k in self.aux}
+        arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
+                     for k, v in self.arrays.items()}
+        vec = P(AXIS, None)
+        wd_specs = {"gr_src_local": vec, "gr_dst_col": vec,
+                    "gr_edge_valid": vec, "gr_edge_weight": vec,
+                    "gr_band": P(AXIS, None, None)}
+        nsb = self._gate_nsb
+
+        def prep_body(aux, state, frontier):
+            aux = {k: v[0] for k, v in aux.items()}
+            if program.fixed_iters is not None:
+                vals = program.update(state[0], aux)
+            else:
+                sent = jnp.asarray(comb.identity, state.dtype)
+                vals = jnp.where(frontier[0] != 0,
+                                 program.update(state[0], aux), sent)
+            return (vals[None],)
+
+        def win_body(wd, vals, partial):
+            wd = {k: v[0] for k, v in wd.items()}
+            out = strat.grid2d_phase1_window(
+                vals[0], wd, partial[0], comb, self._C, self._K,
+                segment_fn=self.segment_fn, edge_value=program.edge_value,
+                push_fn=self.push_fn, edge_semiring=program.edge_semiring,
+                grid_meta=self._grid_meta)
+            return (out[None],)
+
+        def apply_body(arrs, aux, partial, state):
+            arrs = {k: v[0] for k, v in arrs.items()}
+            aux = {k: v[0] for k, v in aux.items()}
+            incoming = self._phase2(partial[0], arrs, comb)
+            new = program.apply(state[0], incoming, aux)
+            delta = new != state[0]
+            changed = jax.lax.psum(delta.any().astype(jnp.int32), AXIS) > 0
+            # frontier collapsed to BLOCK_V granularity: the host-side gate
+            # intersects it with each window's band source-block mask
+            pad = nsb * blk.BLOCK_V - delta.shape[0]
+            f = jnp.pad(delta, (0, pad)) if pad else delta
+            fb = f.reshape(nsb, blk.BLOCK_V).any(axis=1)
+            return (new[None], delta.astype(jnp.int32)[None],
+                    jnp.full((1, 1), changed.astype(jnp.int32)),
+                    fb.astype(jnp.int32)[None])
+
+        smap = functools.partial(compat.shard_map, mesh=self.mesh,
+                                 check_vma=False)
+        prep = jax.jit(smap(prep_body,
+                            in_specs=(aux_specs, vec, vec),
+                            out_specs=(vec,)))
+        win = jax.jit(smap(win_body,
+                           in_specs=(wd_specs, vec, vec),
+                           out_specs=(vec,)))
+        apply_fn = jax.jit(smap(apply_body,
+                                in_specs=(arr_specs, aux_specs, vec, vec),
+                                out_specs=(vec, vec, vec, vec)))
+        fns = (prep, win, apply_fn)
+        self._compiled[key] = fns
+        return fns
+
+    def _run_streamed(self, program, gate) -> tuple[np.ndarray, int]:
+        """The out-of-core superstep driver: per superstep, walk the edge
+        windows through the double-buffered prefetcher and fold each into
+        the running phase-1 partial; then one apply step.  The host loop
+        replicates the resident barrier loop's semantics exactly -- same
+        all-ones initial frontier, same frontier masking, same global
+        ``changed`` termination -- so min-monoid programs are bit-exact
+        against ``residency='resident'`` with identical iteration counts
+        (add monoids differ only by float association across windows).
+
+        Host-side frontier gating: with ``gate``, a (rectangle, window)
+        slot whose band source blocks miss the live frontier is never even
+        READ from the source -- gating saves host->device bandwidth, not
+        just compute -- and windows with no active rectangle at all drop
+        out of the fetch schedule entirely.
+        """
+        sb = self._source
+        cfg = self.stream or StreamConfig()
+        prep, win, apply_fn = self._stream_fns(program)
+        comb = program.combiner
+        _, cols, kc = self._grid_meta
+        nw = sb.num_windows
+        nsb = self._gate_nsb
+
+        def shard(ndim):
+            return NamedSharding(self.mesh, P(AXIS, *([None] * (ndim - 1))))
+
+        shardings = {"gr_src_local": shard(2), "gr_dst_col": shard(2),
+                     "gr_edge_valid": shard(2), "gr_edge_weight": shard(2),
+                     "gr_band": shard(3)}
+        state = jnp.asarray(program.init(self.pg))
+        frontier = jnp.ones((self._C, self._K), jnp.int32)
+        fixed = program.fixed_iters is not None
+        limit = program.fixed_iters if fixed else program.max_iters
+        gate_masks = sb.gate_masks(nsb) if gate else None  # [P, nw, nsb]
+        fb_host = np.ones((self._C, nsb), dtype=bool)
+        pf = _StreamPrefetcher(sb, shardings, pipelined=cfg.prefetch)
+        it = 0
+        changed = True
+        slots_total = slots_skipped = 0
+        outs = {0: None, 1: None}  # per staging slot: the win output whose
+        #                            execution makes the slot safe to reuse
+        try:
+            while changed and it < limit:
+                (vals,) = prep(self.aux, state, frontier)
+                pf.compute = vals
+                if gate_masks is not None:
+                    active = (gate_masks
+                              & fb_host[:, None, :]).any(axis=2)  # [P, nw]
+                else:
+                    active = np.ones((self._C, nw), dtype=bool)
+                sched = np.flatnonzero(active.any(axis=0))
+                slots_total += self._C * nw
+                slots_skipped += self._C * nw - int(active.sum())
+                partial = jnp.full((self._C, cols * kc), comb.identity,
+                                   state.dtype)
+                if len(sched):
+                    k0 = int(sched[0])
+                    pf.submit(k0, active[:, k0], after=outs[pf.next_slot])
+                    for i, k in enumerate(sched):
+                        if i + 1 < len(sched):
+                            nxt = int(sched[i + 1])
+                            pf.submit(nxt, active[:, nxt],
+                                      after=outs[pf.next_slot])
+                        wd, slot = pf.take()
+                        (partial,) = win(wd, vals, partial)
+                        outs[slot] = pf.compute = partial
+                state, delta, changed_dev, fb = apply_fn(
+                    self.arrays, self.aux, partial, state)
+                pf.compute = state
+                it += 1
+                if not fixed:
+                    changed = bool(
+                        np.asarray(jax.device_get(changed_dev))[0, 0])
+                    frontier = delta
+                    fb_host = np.asarray(jax.device_get(fb)).astype(bool)
+        finally:
+            pf.close()
+        overlap = (1.0 - pf.stall_s / pf.copy_s) if pf.copy_s > 0 else 1.0
+        self.dispatch["stream"].update({
+            "supersteps": it,
+            "fetches": pf.fetches,
+            "fetched_bytes": pf.bytes_read,
+            "copy_s": pf.copy_s,
+            "stall_s": pf.stall_s,
+            "overlap_efficiency": max(0.0, min(1.0, overlap)),
+            "edge_bandwidth_bytes_per_s":
+                pf.bytes_read / pf.copy_s if pf.copy_s > 0 else 0.0,
+            "fetch_slots": slots_total,
+            "fetch_skipped": slots_skipped,
+            "fetch_skip_fraction":
+                slots_skipped / slots_total if slots_total else 0.0,
+            "pipelined": bool(cfg.prefetch),
+        })
+        # window-granular slot accounting doubles as the gate record
+        self._gate_skipped += slots_skipped
+        self._gate_slots += slots_total
+        final = np.asarray(jax.device_get(state)).reshape(-1)
+        return final[self.pg.global_to_local], it
+
     # -- batched multi-query execution (DESIGN.md section 11) ----------------
 
     def _smap_batch(self, body):
@@ -783,6 +1157,9 @@ class Engine:
             raise ValueError(
                 f"program {program.name!r} has no batched init "
                 f"(VertexProgram.init_batch); run it with Engine.run")
+        if self.residency == "stream":
+            raise ValueError("the batched query plane has no streamed "
+                             "schedule yet; use a resident Engine")
         sync, gate = self._validate_async(program, sync, gate)
         if sources is None:
             sources = program.sources
@@ -966,7 +1343,7 @@ class Engine:
         }
 
     def run(self, program, replan=None, sync="barrier", gate=None,
-            **params) -> tuple[np.ndarray, int]:
+            residency=None, **params) -> tuple[np.ndarray, int]:
         """Run a vertex program to completion; returns (state, iterations).
 
         ``program`` is a registered name (params forwarded to its factory)
@@ -985,6 +1362,13 @@ class Engine:
         frontier cannot reach their edges (band-block intersection test);
         the launch accounting lands in ``self.dispatch['gate']``.  Both
         compose with ``replan`` (segments drain before any relabel).
+
+        ``residency='stream'`` (on an engine built with it) runs the
+        out-of-core window schedule instead of the whole-loop jit: edge
+        shards stream host->device through the double-buffered prefetcher
+        (DESIGN.md section 13), composing with ``gate='frontier'`` (gated
+        slots are never fetched) but not with ``replan`` or
+        ``sync='overlap'``.  Metrics land in ``self.dispatch['stream']``.
         """
         from repro.core import programs as prog_mod
 
@@ -992,6 +1376,42 @@ class Engine:
             program = prog_mod.make_program(program, **params)
         elif params:
             raise TypeError("params only apply to registered program names")
+
+        residency = self.residency if residency is None else residency
+        if residency not in ("resident", "stream"):
+            raise ValueError(f"unknown residency {residency!r}; "
+                             "choose 'resident' or 'stream'")
+        if residency == "stream":
+            if self.residency != "stream":
+                raise ValueError(
+                    "this engine is bound resident; build it with "
+                    "Engine(..., residency='stream') so the edge planes "
+                    "are never uploaded in the first place")
+            if (program.sources is not None
+                    and program.init_batch is not None
+                    and program.finalize is not None):
+                raise ValueError(
+                    f"{program.name!r} runs on the batched query plane, "
+                    "which has no streamed schedule yet")
+            if replan is not None:
+                raise ValueError(
+                    "replan is a resident-path feature: the streamed "
+                    "schedule has no segment checkpoints to relabel at")
+            if sync != "barrier":
+                raise ValueError(
+                    "residency='stream' already pipelines H2D copies "
+                    "behind compute; sync='overlap' is a resident-only "
+                    "relaxation")
+            _, gate = self._validate_async(program, sync, gate)
+            self._gate_skipped = self._gate_slots = 0
+            out = self._run_streamed(program, gate)
+            self._record_gate(sync, gate)
+            return out
+        if self.residency == "stream":
+            raise ValueError(
+                "this engine is bound with residency='stream' and holds no "
+                "resident edge planes; build a resident Engine for "
+                "residency='resident' runs")
 
         if (program.sources is not None and program.init_batch is not None
                 and program.finalize is not None):
@@ -1039,6 +1459,10 @@ class Engine:
         how the grouped-vs-full grid2d lowering comparison is *measured*
         rather than only modeled (``cost.grid_collective_bytes``)."""
         from repro.core import programs as prog_mod
+
+        if self.residency == "stream":
+            raise ValueError("step_hlo needs the resident edge planes; "
+                             "build a resident Engine")
 
         if isinstance(program, str):
             program = prog_mod.make_program(program, **params)

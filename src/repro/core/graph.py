@@ -28,6 +28,7 @@ load-imbalance observations.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -284,12 +285,16 @@ class PartitionedGraph:
                 # scatters into its narrow column block, so the same order
                 # keeps its bands tight)
                 key = (owner_k * b.nseg + b.seg_blk) * b.nsb + b.src_blk
-            order = _stable_argsort_bounded(key, key_bound)
-            s, d, w = _pack_edges(order, b.src_local, b.dst, b.wgt, b.owner,
-                                  b.per_chunk_e, C, b.emax)
-            band = blocks.edge_bands_grouped(b.src_blk[order],
-                                             b.seg_blk[order],
-                                             b.per_chunk_e, b.emax)
+            if key_dtype is INT and _device_build_enabled(len(key), C,
+                                                          b.emax):
+                s, d, w, band = _build_layout_device(b, key, C)
+            else:
+                order = _stable_argsort_bounded(key, key_bound)
+                s, d, w = _pack_edges(order, b.src_local, b.dst, b.wgt,
+                                      b.owner, b.per_chunk_e, C, b.emax)
+                band = blocks.edge_bands_grouped(b.src_blk[order],
+                                                 b.seg_blk[order],
+                                                 b.per_chunk_e, b.emax)
             self._lazy[which] = (s, d, w, band)
         return self._lazy[which]
 
@@ -456,6 +461,210 @@ class PartitionedGraph:
         prep = self._prep if self._prep is not None else _edge_prep(self.graph)
         return _materialize(self.graph, plan, partitioner, prep, eager=False)
 
+    # -- out-of-core streaming (DESIGN.md section 13) ------------------------
+
+    def cached_layout(self, which: str, cache_dir: str) -> tuple:
+        """Disk-backed ``_layout``: the cross-process analogue of ``_lazy``.
+
+        A warm cache entry memory-maps the packed planes straight off disk
+        (no sort, no pack, no materialized host copy); a cold one builds
+        once through ``_layout`` and persists atomically.  The entry is
+        keyed by ``checkpoint.layout_fingerprint`` (graph bytes +
+        partitioner spec + chare count + layout name), so a changed graph
+        or policy can never reload a stale build -- it simply misses and
+        rebuilds.
+        """
+        from repro.checkpoint import store as ckpt_store
+
+        fp = ckpt_store.layout_fingerprint(self.graph, self.partitioner,
+                                           self.num_chunks, which)
+        hit = ckpt_store.open_layout_cache(cache_dir, fp)
+        if which in self._lazy:
+            # already materialized in this process (an eager partition):
+            # serve it, but still persist a missing entry so later
+            # processes warm-start off disk
+            if hit is None:
+                s, d, w, band = self._lazy[which]
+                ckpt_store.save_layout_cache(cache_dir, fp, {
+                    "src": s, "dst": d, "weight": w, "band": band})
+            return self._lazy[which]
+        if hit is None:
+            s, d, w, band = self._layout(which)
+            ckpt_store.save_layout_cache(cache_dir, fp, {
+                "src": s, "dst": d, "weight": w, "band": band})
+            return self._lazy[which]
+        self._lazy[which] = (hit["src"], hit["dst"], hit["weight"],
+                             hit["band"])
+        return self._lazy[which]
+
+    def shard_source(self, windows: int | None = None,
+                     budget_bytes: int | None = None,
+                     cache_dir: str | None = None) -> "ShardSource":
+        """Build the windowed edge-shard provider for ``residency="stream"``.
+
+        Window width is chosen from ``windows`` (count) or sized so TWO
+        staging windows -- the double-buffer working set -- fit under
+        ``budget_bytes``; default is 8 windows.  With ``cache_dir`` the
+        planes come from the disk layout cache (memory-mapped on a warm
+        hit), so the host never holds a second copy of the edge layout.
+        """
+        if not self.is_grid:
+            raise ValueError(
+                "residency='stream' needs a grid(R,C) partition: rectangles "
+                "are the independently bounded shard unit (use grid(1,1) "
+                "for a single PE)")
+        if cache_dir is not None:
+            s, d, w, band = self.cached_layout("grid", cache_dir)
+        else:
+            s, d, w, band = self._layout("grid")
+        nb = blocks.num_edge_blocks(s.shape[1])
+        per_block = _window_block_bytes(self.num_chunks)
+        if windows is not None:
+            if windows < 1:
+                raise ValueError(f"windows must be >= 1, got {windows}")
+            nbw = max(-(-nb // int(windows)), 1)
+        elif budget_bytes is not None:
+            nbw = int(budget_bytes // (2 * per_block))
+            if nbw < 1:
+                raise ValueError(
+                    f"budget_bytes={budget_bytes} cannot hold the "
+                    f"double-buffered working set: two single-block staging "
+                    f"windows need {2 * per_block} bytes")
+            nbw = min(nbw, nb)
+        else:
+            nbw = max(-(-nb // 8), 1)
+        return ShardSource(src=s, dst=d, valid=self.gr_edge_valid, weight=w,
+                           band=band, blocks_per_window=nbw)
+
+
+def _window_block_bytes(num_rects: int) -> int:
+    """Staged bytes one BLOCK_E window column costs across all rectangles:
+    src/dst/valid int32 + weight float32 planes plus the 4-row band slice."""
+    return num_rects * blocks.BLOCK_E * 16 + num_rects * 4 * 4
+
+
+@dataclasses.dataclass
+class ShardSource:
+    """Windowed edge-shard provider for ``residency="stream"`` (DESIGN.md
+    section 13).
+
+    Wraps one grid layout's packed planes -- host ndarrays or memory-mapped
+    layout-cache files -- and serves BLOCK_E-aligned *edge windows*: window
+    ``k`` of rectangle ``p`` is columns ``[k*W, (k+1)*W)`` of the
+    ``[P, Emax]`` pack plus the matching band-table slice.  The streamed
+    engine keeps only two staging windows device-resident (the
+    double-buffer pool), so device edge footprint is ``2/num_windows`` of
+    the resident layout regardless of graph size.
+    """
+
+    src: np.ndarray      # [P, Emax] int32 row-local sources
+    dst: np.ndarray      # [P, Emax] int32 column-padded destinations
+    valid: np.ndarray    # [P, Emax] int32 padding mask
+    weight: np.ndarray   # [P, Emax] float32
+    band: np.ndarray     # [P, 4, NB] int32
+    blocks_per_window: int
+
+    @property
+    def num_rects(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def emax(self) -> int:
+        return self.src.shape[1]
+
+    @property
+    def num_blocks(self) -> int:
+        return blocks.num_edge_blocks(self.emax)
+
+    @property
+    def num_windows(self) -> int:
+        return -(-self.num_blocks // self.blocks_per_window)
+
+    @property
+    def window_edges(self) -> int:
+        return self.blocks_per_window * blocks.BLOCK_E
+
+    @property
+    def origin(self) -> str:
+        """"disk" when the planes are memory-mapped cache files."""
+        return "disk" if isinstance(self.src, np.memmap) else "memory"
+
+    @property
+    def total_edge_bytes(self) -> int:
+        """Bytes the RESIDENT path would upload for the edge layout."""
+        return (self.src.nbytes + self.dst.nbytes + self.valid.nbytes
+                + self.weight.nbytes + self.band.nbytes)
+
+    @property
+    def window_bytes(self) -> int:
+        """Device bytes of ONE staging window (all rectangles)."""
+        return _window_block_bytes(self.num_rects) * self.blocks_per_window
+
+    def make_staging(self) -> dict:
+        """One recycled host staging slot, keyed like the resident ``gr_*``
+        arrays so the streamed phase-1 body is the resident body unchanged."""
+        P, W = self.num_rects, self.window_edges
+        return {
+            "gr_src_local": np.zeros((P, W), dtype=INT),
+            "gr_dst_col": np.zeros((P, W), dtype=INT),
+            "gr_edge_valid": np.zeros((P, W), dtype=INT),
+            "gr_edge_weight": np.ones((P, W), dtype=WEIGHT),
+            "gr_band": np.zeros((P, 4, self.blocks_per_window), dtype=INT),
+        }
+
+    def gate_masks(self, num_src_blocks: int) -> np.ndarray:
+        """``[P, num_windows, nsb]`` bool: which gather-side source blocks
+        each (rectangle, window) shard can read -- ``band_source_mask`` at
+        window granularity.  The streamed scheduler intersects these with
+        the live frontier blocks; a slot that misses is neither fetched nor
+        pushed, so gating saves H2D bandwidth, not just launches."""
+        P, nw = self.num_rects, self.num_windows
+        out = np.zeros((P, nw, num_src_blocks), dtype=bool)
+        for k in range(nw):
+            blo = k * self.blocks_per_window
+            bhi = min(self.num_blocks, blo + self.blocks_per_window)
+            sub = np.ascontiguousarray(self.band[:, :, blo:bhi])
+            out[:, k, :] = blocks.band_source_mask(
+                sub, num_src_blocks).astype(bool)
+        return out
+
+    def read_window(self, k: int, staging: dict,
+                    active: np.ndarray | None = None) -> int:
+        """Copy window ``k`` into the recycled ``staging`` slot; returns the
+        bytes actually read from the backing store.
+
+        Rectangles with ``active[p] == False`` are skipped entirely (their
+        staged rows keep whatever a previous window left, with the validity
+        mask and band table cleared so both push paths treat them as empty
+        -- the combiner-identity contribution frontier gating relies on).
+        The ragged tail window is zero-masked the same way.
+        """
+        lo = k * self.window_edges
+        hi = min(self.emax, lo + self.window_edges)
+        blo = k * self.blocks_per_window
+        bhi = min(self.num_blocks, blo + self.blocks_per_window)
+        n, nbk = hi - lo, bhi - blo
+        idx = (np.arange(self.num_rects) if active is None
+               else np.flatnonzero(np.asarray(active)))
+        read = 0
+        staging["gr_edge_valid"][...] = 0
+        bband = staging["gr_band"]
+        bband[:, 0::2, :] = 0  # empty-block convention: (0, -1, 0, -1)
+        bband[:, 1::2, :] = -1
+        if n <= 0 or len(idx) == 0:
+            return read
+        for name, plane in (("gr_src_local", self.src),
+                            ("gr_dst_col", self.dst),
+                            ("gr_edge_valid", self.valid),
+                            ("gr_edge_weight", self.weight)):
+            chunk = plane[idx, lo:hi]
+            staging[name][idx, :n] = chunk
+            read += chunk.nbytes
+        bchunk = self.band[idx, :, blo:bhi]
+        bband[idx, :, :nbk] = bchunk
+        read += bchunk.nbytes
+        return read
+
 
 def _stable_argsort_bounded(keys: np.ndarray, bound: int) -> np.ndarray:
     """Stable argsort of non-negative int keys known to be < ``bound``.
@@ -504,6 +713,89 @@ def _pack_edges(order_idx, src_local, dst, wgt, owner, per_chunk_e,
     return s, d, w
 
 
+# Edge count above which the layout build (stable argsort + rectangle pack +
+# band reduction) runs on device instead of the host radix path: scale-20
+# stand-ins cross it, every CI-sized graph stays on the host build.  Override
+# with REPRO_DEVICE_BUILD=device|host (auto = threshold).
+_DEVICE_BUILD_MIN_EDGES = 1 << 21
+
+
+def _device_build_enabled(num_edges: int, num_chunks: int, emax: int) -> bool:
+    mode = os.environ.get("REPRO_DEVICE_BUILD", "auto")
+    if mode in ("host", "0"):
+        return False
+    # the device pack scatters int32 flat indices into [C, NB*BLOCK_E]; fall
+    # back to the host build when that padded plane leaves int32 range
+    nb = blocks.num_edge_blocks(emax)
+    if num_chunks * nb * blocks.BLOCK_E >= 1 << 31:
+        return False
+    if mode in ("device", "1"):
+        return True
+    return num_edges >= _DEVICE_BUILD_MIN_EDGES
+
+
+def _build_layout_device(b: "_EdgeBase", key: np.ndarray, C: int) -> tuple:
+    """On-device twin of the host layout build, bit-identical by design.
+
+    The three O(E log E / E) passes that dominate prep at scale -- the
+    stable argsort into (owner, tile-bucket) order, the rectangle pack
+    scatter, and the band min/max -- run as one jitted XLA program; only the
+    packed [C, Emax] planes round-trip back to host (they must live there
+    anyway for the streamed shard source).  Stability of the sort is the
+    whole contract: identical keys => identical permutation => the packed
+    planes and band tables match the host radix path bit for bit (test:
+    tests/test_stream.py::test_device_build_bit_identical).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    E = len(key)
+    nb = blocks.num_edge_blocks(b.emax)
+    emax_p = nb * blocks.BLOCK_E
+    starts = np.zeros(C, dtype=np.int64)
+    np.cumsum(b.per_chunk_e[:-1], out=starts[1:])
+    row_off = (np.arange(C, dtype=np.int64) * emax_p - starts).astype(INT)
+
+    @jax.jit
+    def build(key, src_local, dst, wgt, src_blk, seg_blk, owner, row_off):
+        order = jnp.argsort(key, stable=True)
+        ow = owner[order]
+        # flat slot of each edge in the padded [C, emax_p] plane: the same
+        # ascending row-offset + within-row-rank formula as _pack_edges
+        flat = jnp.arange(E, dtype=INT) + row_off[ow]
+        plane = lambda fill, dt: jnp.full(C * emax_p, fill, dtype=dt)
+        s = plane(0, INT).at[flat].set(src_local[order])
+        d = plane(0, INT).at[flat].set(dst[order])
+        w = plane(1.0, WEIGHT).at[flat].set(wgt[order])
+        # band min/max over BLOCK_E columns; sentinel fill so padding slots
+        # never win, then the (0, -1, 0, -1) empty-block clamp
+        big = jnp.int32(1) << 30
+        shape = (C, nb, blocks.BLOCK_E)
+        sb, gb = src_blk[order], seg_blk[order]
+        lo = lambda blk: plane(big, INT).at[flat].set(blk).reshape(
+            shape).min(axis=2)
+        hi = lambda blk: plane(-1, INT).at[flat].set(blk).reshape(
+            shape).max(axis=2)
+        src_lo, src_hi = lo(sb), hi(sb)
+        seg_lo, seg_hi = lo(gb), hi(gb)
+        empty = src_hi < 0
+        band = jnp.stack([jnp.where(empty, 0, src_lo), src_hi,
+                          jnp.where(empty, 0, seg_lo), seg_hi], axis=1)
+        return s.reshape(C, emax_p), d.reshape(C, emax_p), \
+            w.reshape(C, emax_p), band
+
+    s, d, w, band = build(
+        jnp.asarray(key.astype(INT)), jnp.asarray(b.src_local),
+        jnp.asarray(b.dst), jnp.asarray(b.wgt),
+        jnp.asarray(b.src_blk.astype(INT)), jnp.asarray(b.seg_blk.astype(INT)),
+        jnp.asarray(b.owner.astype(INT)), jnp.asarray(row_off))
+    s, d, w, band = map(lambda a: np.asarray(jax.device_get(a)),
+                        (s, d, w, band))
+    return (np.ascontiguousarray(s[:, :b.emax]),
+            np.ascontiguousarray(d[:, :b.emax]),
+            np.ascontiguousarray(w[:, :b.emax]), band)
+
+
 @dataclasses.dataclass(frozen=True)
 class _EdgePrep:
     """Plan-independent prep products, computed once per graph and shared by
@@ -527,16 +819,22 @@ def _edge_prep(graph: Graph) -> _EdgePrep:
 
 
 def partition(graph: Graph, num_chunks: int,
-              partitioner: str = "contiguous") -> PartitionedGraph:
+              partitioner: str = "contiguous",
+              eager: bool = True) -> PartitionedGraph:
     """Split ``graph`` into ``num_chunks`` chares under a partitioner policy.
 
     ``partitioner`` names a registered policy (``repro.core.partitioners``);
     the default reproduces the paper's contiguous equal-vertex chunks.
     Re-placing an existing partition is cheaper via
     ``PartitionedGraph.repartition`` (shares the prep products).
+
+    ``eager=False`` defers the edge-layout builds to first use -- the entry
+    point for the disk layout cache (``cached_layout``/``shard_source``): a
+    deferred partition whose layout comes off a warm cache entry never runs
+    the sort/pack build at all.
     """
     plan = part_mod.make_plan(graph, num_chunks, partitioner)
-    return _materialize(graph, plan, partitioner, _edge_prep(graph))
+    return _materialize(graph, plan, partitioner, _edge_prep(graph), eager)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -322,6 +322,27 @@ def grid2d_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
                           pg_arrays["gr_band"], edge_semiring)
 
 
+def grid2d_phase1_window(vals, window_arrays, partial, combiner, num_chunks,
+                         chunk_size, segment_fn=None, edge_value=None,
+                         push_fn=None, edge_semiring=None, grid_meta=None):
+    """Streamed phase 1: fold ONE edge-window shard into the running
+    rectangle partial (``residency="stream"``, DESIGN.md section 13).
+
+    ``window_arrays`` carries the same ``gr_*`` names as the resident grid
+    layout, sliced to one BLOCK_E-aligned edge window, so the window body IS
+    ``grid2d_phase1`` unchanged -- the streamed schedule only changes *when*
+    edges are on device, never what they compute.  Folding with the
+    combiner's merge is exact: each edge appears in exactly one window, so
+    min recovers the resident result bit for bit and add differs only in
+    float association order (same guarantee the two-phase reduce already
+    makes across rectangles).
+    """
+    contrib = grid2d_phase1(vals, window_arrays, combiner, num_chunks,
+                            chunk_size, segment_fn, edge_value, push_fn,
+                            edge_semiring, grid_meta)
+    return combiner.merge(partial, contrib)
+
+
 def grid2d_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,
                   segment_fn=None, grid_meta=None, collectives="grouped"):
     R, C, Kc = grid_meta
@@ -431,6 +452,11 @@ def phase1_identity(strategy, vals, pg_arrays, combiner, num_chunks,
 
 # Strategies that read the pairwise (edge-bucketed) layout instead of the CSR.
 PAIRWISE = {"basic"}
+
+# Strategies whose phase 1 admits the windowed out-of-core schedule
+# (``residency="stream"``): phase 1 must be a pure per-shard fold over edge
+# slices with a combiner merge -- today that is the grid rectangle layout.
+STREAMABLE = {"grid2d"}
 
 # Which edge layout each strategy's local combine reads -- the engine's
 # adaptive dispatch prices the matching band table ("pairwise" has no push

@@ -97,7 +97,8 @@ def _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p, combine,
 @partial(jax.jit, static_argnames=("num_segments", "combine", "interpret",
                                    "fused", "unit_weight"))
 def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
-         band=None, interpret=not _ON_TPU, fused=True, unit_weight=False):
+         band=None, interpret=not _ON_TPU, fused=True, unit_weight=False,
+         init=None):
     """out[s] = combine_{e: dst[e]==s, valid[e]==1} edge_value(vals[src[e]]).
 
     The paper's per-chare hot loop; arbitrary (unpadded) shapes accepted.
@@ -116,6 +117,12 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
     ``unit_weight`` applies the semiring transform with a constant 1 and no
     streamed weight operand (BFS hop counts).  ``fused=False`` runs the
     legacy staged pair.
+
+    ``init`` (optional, ``[num_segments(, B)]``) seeds the accumulator with
+    a prior partial instead of the combiner identity: chaining edge-slice
+    calls through it equals one call over all the edges (exactly for min,
+    up to float association for add) -- the streamed window schedule's
+    buffer-recycling contract (DESIGN.md section 13).
     """
     identity = 0 if combine == "add" else push_min.SENTINEL
     vals_p = _pad_to(vals, BLOCK_V, identity)
@@ -127,15 +134,31 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
         # inf -> sentinel so the kernel's int-sentinel fills and masks compare
         # consistently; restored to inf on the way out
         vals_p = jnp.minimum(vals_p, push_min.SENTINEL)
+
+    def _prep_init(out_dtype):
+        ip = _pad_to(init, BLOCK_S, identity).astype(out_dtype)
+        if combine == "min" and jnp.issubdtype(out_dtype, jnp.floating):
+            return jnp.minimum(ip, push_min.SENTINEL)  # +inf -> sentinel
+        return ip
+
     if fused:
         if band is None:
             band = _bands_on_device(src_p, dst_p, valid_p,
                                     src_p.shape[0] // BLOCK_E)
         w_p = None if weight is None else _pad_to(
             weight, BLOCK_E, 1 if combine == "add" else 0)
+        init_p = None
+        if init is not None:
+            if combine == "add":
+                od = vals_p.dtype if jnp.issubdtype(vals_p.dtype,
+                                                    jnp.integer) \
+                    else jnp.promote_types(vals_p.dtype, jnp.float32)
+            else:
+                od = vals_p.dtype
+            init_p = _prep_init(od)
         out = fused_mod.fused_push(band, src_p, dst_p, valid_p, w_p, vals_p,
                                    nseg_p, combine=combine,
-                                   unit_weight=unit_weight,
+                                   unit_weight=unit_weight, init=init_p,
                                    interpret=interpret)
     else:
         if unit_weight and weight is None and combine == "min":
@@ -148,6 +171,9 @@ def push(vals, src, dst, valid, num_segments, combine="add", weight=None,
         else:
             out = _push_staged(vals_p, src_p, dst_p, valid_p, weight, nseg_p,
                                combine, interpret)
+        if init is not None:  # staged kernels have no seed operand: fold
+            ip = _prep_init(out.dtype)
+            out = out + ip if combine == "add" else jnp.minimum(out, ip)
     out = out[:num_segments]
     if combine == "add":
         return out.astype(vals.dtype)
@@ -225,9 +251,9 @@ def make_push_fn(interpret=not _ON_TPU, fused=True):
     """
 
     def fn(vals, src, dst, valid, weight, num_segments, combine, band=None,
-           unit=False):
+           unit=False, init=None):
         return push(vals, src, dst, valid, num_segments, combine=combine,
                     weight=weight, band=band, interpret=interpret,
-                    fused=fused, unit_weight=unit)
+                    fused=fused, unit_weight=unit, init=init)
 
     return fn

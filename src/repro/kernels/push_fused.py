@@ -52,18 +52,21 @@ SENTINEL = jnp.iinfo(jnp.int32).max
 
 
 def _fused_push_add_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
-                           vals_ref, out_ref, *, weight_mode):
+                           vals_ref, init_ref, out_ref, *, weight_mode):
     """One edge block: gather (band-pruned) -> weight multiply -> scatter.
 
     ``weight_mode``: "none" skips the transform, "array" multiplies by the
     streamed per-edge weights ("unit" never reaches the add kernel --
     multiplying by 1 is the identity, so the wrapper folds it to "none").
+    ``init_ref`` (optional) seeds the accumulator instead of zeros -- the
+    streamed window schedule chains sweeps through one recycled buffer.
     """
     e = pl.program_id(0)
 
     @pl.when(e == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = (jnp.zeros_like(out_ref) if init_ref is None
+                        else init_ref[...])
 
     src = src_ref[...]
     valid = (valid_ref[...] != 0)
@@ -99,7 +102,7 @@ def _fused_push_add_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
 
 
 def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
-                           vals_ref, out_ref, *, weight_mode):
+                           vals_ref, init_ref, out_ref, *, weight_mode):
     """Min monoid: VPU mask-and-reduce in place of the MXU one-hot matmul.
 
     ``weight_mode`` "array" applies the min-plus semiring transform: a
@@ -107,13 +110,15 @@ def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
     values ride on plain addition -- anything at/above the sentinel is
     "unreached" and the caller maps it back to +inf).  "unit" is the same
     with a compile-time constant 1 (BFS hop counts): no per-edge weight
-    operand is streamed from HBM at all.
+    operand is streamed from HBM at all.  ``init_ref`` (optional) seeds the
+    accumulator instead of the sentinel (chained window sweeps).
     """
     e = pl.program_id(0)
 
     @pl.when(e == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+        out_ref[...] = (jnp.full_like(out_ref, SENTINEL) if init_ref is None
+                        else init_ref[...])
 
     src = src_ref[...]
     valid = (valid_ref[...] != 0)
@@ -165,7 +170,7 @@ def _fused_push_min_kernel(band_ref, src_ref, dst_ref, valid_ref, w_ref,
 
 
 def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
-               combine="add", unit_weight=False, interpret=True):
+               combine="add", unit_weight=False, init=None, interpret=True):
     """One-launch fused push over pre-padded inputs.
 
     Shapes: edges padded to BLOCK_E (``band`` is [4, E/BLOCK_E] int32 from
@@ -177,6 +182,13 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
     constant 1 instead of a streamed operand (the kernel is specialized, not
     masked).  The accumulator/output dtype is the ``vals`` dtype for min and
     float32 (or the input float dtype) for add.
+
+    ``init`` (optional, same shape/dtype as the output) seeds the resident
+    accumulator in place of the combiner identity -- the buffer-pool
+    contract of the streamed window schedule (DESIGN.md section 13): each
+    window's sweep folds into the previous windows' partial through ONE
+    recycled VMEM-resident buffer, so N chained window calls allocate the
+    same accumulator a single resident sweep does, not N.
     """
     E, V = src.shape[0], vals.shape[0]
     if unit_weight and weight is not None:
@@ -192,19 +204,29 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
     else:
         body = _fused_push_min_kernel
         out_dtype = vals.dtype
-    kernel = functools.partial(body, weight_mode=weight_mode)
+    have_w = weight_mode == "array"
+    have_init = init is not None
+    body = functools.partial(body, weight_mode=weight_mode)
+
+    def kernel(band_ref, *refs):
+        # unpack the optional operands (weight stream, seed accumulator);
+        # pallas passes out_ref last
+        refs = list(refs)
+        s, d, v = refs[0], refs[1], refs[2]
+        i = 3
+        w_ref = refs[i] if have_w else None
+        i += int(have_w)
+        vals_ref = refs[i]
+        i += 1
+        init_ref = refs[i] if have_init else None
+        body(band_ref, s, d, v, w_ref, vals_ref, init_ref, refs[-1])
+
     edge_spec = lambda: pl.BlockSpec((BLOCK_E,), lambda e, band: (e,))
     in_specs = [edge_spec(), edge_spec(), edge_spec()]
     operands = [src, dst, valid]
-    if weight_mode == "array":
+    if have_w:
         in_specs.append(edge_spec())
         operands.append(weight)
-    else:
-        # no per-edge weight operand: the transform is the identity or a
-        # compile-time constant, so nothing is streamed for it
-        w_kernel = kernel
-        kernel = lambda band, s, d, v, vals_ref, out_ref: \
-            w_kernel(band, s, d, v, None, vals_ref, out_ref)
     if vals.ndim == 2:  # batched [V, B] plane, resident across the sweep
         B = vals.shape[1]
         in_specs.append(pl.BlockSpec((V, B), lambda e, band: (0, 0)))
@@ -214,6 +236,14 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
         in_specs.append(pl.BlockSpec((V,), lambda e, band: (0,)))  # resident
         out_spec = pl.BlockSpec((num_segments,), lambda e, band: (0,))
         out_shape = (num_segments,)
+    operands.append(vals)
+    if have_init:
+        if tuple(init.shape) != out_shape or init.dtype != out_dtype:
+            raise ValueError(f"init {init.shape}/{init.dtype} must match the "
+                             f"output {out_shape}/{out_dtype}")
+        # the seed accumulator is resident like out: same block-0 spec
+        in_specs.append(out_spec)
+        operands.append(init)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # the band table rides in SMEM
         grid=(E // BLOCK_E,),
@@ -225,4 +255,4 @@ def fused_push(band, src, dst, valid, weight, vals, num_segments, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
         interpret=interpret,
-    )(band, *operands, vals)
+    )(band, *operands)

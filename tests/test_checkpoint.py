@@ -87,3 +87,113 @@ def test_async_checkpointer(tmp_path):
 def test_no_checkpoint_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path / "empty"), {"w": jnp.zeros(1)})
+
+
+def test_missing_leaves_named_up_front(tmp_path):
+    """Structure validation runs against meta.json before any placement:
+    one KeyError naming EVERY absent leaf, not the first one hit."""
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    want = jax.eval_shape(lambda: {"w": jnp.zeros((4,)),
+                                   "opt": {"mu": jnp.zeros((4,)),
+                                           "nu": jnp.zeros((4,))}})
+    with pytest.raises(KeyError) as exc:
+        restore_checkpoint(str(tmp_path), want)
+    msg = str(exc.value)
+    assert "2 leaves" in msg and "opt/mu" in msg and "opt/nu" in msg
+
+
+def test_async_writer_failure_reraised(tmp_path, monkeypatch):
+    """A background-write failure surfaces from the next wait()/save()
+    instead of vanishing with the daemon thread, and is raised once."""
+    from repro.checkpoint import store
+
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+
+    def boom(*a, **k):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(store.np, "savez", boom)
+    ck.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises(OSError, match="injected"):
+        ck.wait()
+    monkeypatch.undo()
+    ck.wait()  # error was cleared by the raise; the writer is reusable
+    ck.save(2, {"w": jnp.zeros((4,))})
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 2
+    # no staging garbage left behind by the failed writer
+    assert not any(".tmp_" in n for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Disk layout cache (the streamed engine's shard store)
+# ---------------------------------------------------------------------------
+
+
+def _cache_graph():
+    from repro.core import graph as G
+
+    return G.random_weights(G.rmat(9, 1500, seed=4), seed=4)
+
+
+@pytest.mark.parametrize("spec,chunks", [
+    ("contiguous", 4), ("edge_balanced", 4), ("striped", 4),
+    ("degree_sorted", 4), ("grid(1,1)", 1), ("grid(2,2)", 4),
+    ("grid(2,4)", 8),
+])
+def test_layout_cache_roundtrip_bit_identical(tmp_path, spec, chunks):
+    """Every partitioner policy and grid shape: the mmap'd warm entry is
+    byte-for-byte the cold build (src/dst/weight planes + band tables)."""
+    from repro.core import partition
+
+    g = _cache_graph()
+    which = "grid" if spec.startswith("grid") else "basic"
+    d = str(tmp_path / "layouts")
+    built = partition(g, chunks, spec).cached_layout(which, d)
+    warm = partition(g, chunks, spec, eager=False).cached_layout(which, d)
+    assert any(isinstance(a, np.memmap) for a in warm)
+    for a, b, name in zip(built, warm, ("src", "dst", "weight", "band")):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (spec, name)
+
+
+def test_layout_cache_distinct_inputs_never_collide(tmp_path):
+    """Graph bytes, partitioner, chare count, and layout name all feed the
+    fingerprint: each variant lands in its own entry."""
+    from repro.checkpoint.store import layout_fingerprint
+    from repro.core import graph as G
+
+    g1 = _cache_graph()
+    g2 = G.random_weights(G.rmat(9, 1500, seed=5), seed=5)
+    fps = {layout_fingerprint(g1, "grid(2,2)", 4, "grid"),
+           layout_fingerprint(g2, "grid(2,2)", 4, "grid"),
+           layout_fingerprint(g1, "grid(4,1)", 4, "grid"),
+           layout_fingerprint(g1, "grid(2,2)", 4, "basic"),
+           layout_fingerprint(g1, "contiguous", 4, "basic")}
+    assert len(fps) == 5
+
+
+def test_layout_cache_tampered_entry_rejected(tmp_path):
+    """A stored fingerprint that disagrees with the requested one (torn or
+    tampered entry, truncated-prefix collision) raises instead of serving
+    wrong shards."""
+    import json
+
+    from repro.checkpoint.store import (layout_fingerprint,
+                                        open_layout_cache)
+    from repro.core import partition
+
+    g = _cache_graph()
+    d = str(tmp_path / "layouts")
+    partition(g, 4, "grid(2,2)").cached_layout("grid", d)
+    fp = layout_fingerprint(g, "grid(2,2)", 4, "grid")
+    entry = os.path.join(d, f"layout_{fp[:16]}")
+    meta = os.path.join(entry, "meta.json")
+    with open(meta) as f:
+        m = json.load(f)
+    m["fingerprint"] = "0" * 64
+    with open(meta, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="stale"):
+        open_layout_cache(d, fp)
+    # a fingerprint with no entry at all is a clean miss, not an error
+    assert open_layout_cache(d, "f" * 64) is None

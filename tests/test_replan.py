@@ -383,7 +383,8 @@ def test_dispatch_explicit_override_preserved():
     e = Engine(pg, push_fn=hook)
     assert e.push_fn is hook
     assert e.dispatch == {"choice": "explicit", "mode": "explicit",
-                          "collectives": "full"}  # 1-D: nothing to group
+                          "collectives": "full",  # 1-D: nothing to group
+                          "residency": "resident"}
     e2 = Engine(pg, push_fn=None)
     assert e2.push_fn is None and e2.dispatch["mode"] == "explicit"
     e3 = Engine(pg, strategy="basic")  # no push loop to fuse

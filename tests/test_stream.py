@@ -1,0 +1,363 @@
+"""Out-of-core rectangle streaming (ISSUE 8): the double-buffered edge-shard
+pipeline must be a pure residency change -- bit-exact results and identical
+iteration counts vs the resident grid2d path for the min monoids, allclose
+for PageRank -- plus the budget sizing, gating, disk layout cache, and
+on-device build contracts.
+
+Everything here runs in the main pytest process on the real single device
+(grid(1,1) is the streamable single-PE shape); multi-PE streamed cells live
+in tests/test_multidevice.py behind the subprocess harness.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import conftest
+
+
+def _weighted_graph(scale=11, edges=16000, seed=1):
+    import repro.core as C
+
+    return C.random_weights(C.rmat(scale, edges, seed=seed))
+
+
+def _stream_engine(g, windows=3, eager=True, **kw):
+    import repro.core as C
+    from repro.core import Engine, StreamConfig
+
+    pg = C.partition(g, 1, "grid(1,1)", eager=eager)
+    return Engine(pg, residency="stream",
+                  stream=StreamConfig(windows=windows, **kw))
+
+
+def _resident_engine(g):
+    import repro.core as C
+    from repro.core import Engine
+
+    return Engine(C.partition(g, 1, "grid(1,1)"))
+
+
+PROGRAMS = (("sssp", {"source": 3}), ("bfs", {"source": 3}),
+            ("labelprop", {}))
+
+
+# ---------------------------------------------------------------------------
+# Residency equivalence: streamed == resident
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prog,params", PROGRAMS,
+                         ids=[p for p, _ in PROGRAMS])
+def test_stream_matches_resident(prog, params):
+    """Min-monoid programs are bit-exact with identical iteration counts:
+    the window folds chain through the combiner's min, which is exact."""
+    import repro.core as C
+
+    g = _weighted_graph()
+    gp = C.get_spec(prog).prepare_graph(g)
+    ref, ref_it = _resident_engine(gp).run(prog, **params)
+    eng = _stream_engine(gp)
+    got, it = eng.run(prog, **params)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+    assert it == ref_it
+    st = eng.dispatch["stream"]
+    assert eng.dispatch["residency"] == "stream"
+    assert st["supersteps"] == it
+    assert st["fetches"] > 0 and st["fetched_bytes"] > 0
+
+
+def test_stream_pagerank_allclose():
+    """Add-monoid folds reassociate across windows: allclose, not bit-exact."""
+    g = _weighted_graph()
+    ref, _ = _resident_engine(g).run("pagerank")
+    got, _ = _stream_engine(g).run("pagerank")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_stream_serialized_matches():
+    """prefetch=False (the serialized baseline the overlap metric is
+    measured against) must still be exact -- only the timing differs."""
+    g = _weighted_graph()
+    ref, ref_it = _resident_engine(g).run("sssp", source=3)
+    eng = _stream_engine(g, prefetch=False)
+    got, it = eng.run("sssp", source=3)
+    assert np.array_equal(np.asarray(got), np.asarray(ref)) and it == ref_it
+    assert eng.dispatch["stream"]["pipelined"] is False
+
+
+# ---------------------------------------------------------------------------
+# Frontier gating: skipped windows are never fetched
+# ---------------------------------------------------------------------------
+
+
+def _block_chain(nblocks=8, per=256):
+    """BFS frontier stays inside ~one vertex block: each block is a star
+    from its first vertex, bridged to the next block.  The dst-major window
+    order then gives every window a NARROW source band, so frontier gating
+    has something to skip even at grid(1,1) -- a dense RMAT's windows all
+    span every source block and legitimately never gate there."""
+    from repro.core import from_edges
+
+    srcs, dsts = [], []
+    for b in range(nblocks):
+        lo = b * per
+        srcs += [lo] * (per - 1)
+        dsts += list(range(lo + 1, lo + per))
+        if b + 1 < nblocks:
+            srcs.append(lo + 1)
+            dsts.append(lo + per)
+    return from_edges(nblocks * per, np.array(srcs, np.int32),
+                      np.array(dsts, np.int32))
+
+
+def test_stream_frontier_gate_exact_and_skips_fetches():
+    g = _block_chain()
+    ref, ref_it = _resident_engine(g).run("bfs", source=0)
+    eng = _stream_engine(g, windows=4)
+    got, it = eng.run("bfs", source=0, gate="frontier")
+    assert np.array_equal(np.asarray(got), np.asarray(ref)) and it == ref_it
+    st = eng.dispatch["stream"]
+    # slot accounting: every (superstep x window) slot is either fetched
+    # into the pipeline or skipped by the gate, never both
+    assert st["fetch_slots"] == st["fetches"] + st["fetch_skipped"]
+    # the localized frontier must gate off a large share of the fetches
+    assert st["fetch_skip_fraction"] >= 0.4, st
+    assert st["fetch_skip_fraction"] == pytest.approx(
+        st["fetch_skipped"] / st["fetch_slots"])
+    gate = eng.dispatch["gate"]
+    assert gate["enabled"] and gate["skipped_fraction"] > 0
+
+
+def test_stream_ungated_fetches_every_slot():
+    eng = _stream_engine(_weighted_graph(), windows=4)
+    _, it = eng.run("bfs", source=3)
+    st = eng.dispatch["stream"]
+    assert st["fetch_skipped"] == 0
+    assert st["fetches"] == it * st["windows"]
+
+
+# ---------------------------------------------------------------------------
+# Budget sizing and config validation
+# ---------------------------------------------------------------------------
+
+
+def test_budget_sizes_the_double_buffer():
+    import repro.core as C
+    from repro.core import Engine, StreamConfig
+
+    g = _weighted_graph()
+    pg = C.partition(g, 1, "grid(1,1)")
+    total = pg.shard_source(windows=1).total_edge_bytes
+    budget = total // 4
+    eng = Engine(pg, residency="stream",
+                 stream=StreamConfig(budget_bytes=budget))
+    st = eng.dispatch["stream"]
+    assert st["budget_bytes"] == budget
+    # the enforced invariant: both staging windows fit under the budget,
+    # and the budget is genuinely smaller than full residency
+    assert st["resident_edge_bytes"] <= budget < st["total_edge_bytes"]
+    assert st["edge_fraction_resident"] < 1.0
+    ref, _ = _resident_engine(g).run("sssp", source=3)
+    got, _ = eng.run("sssp", source=3)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_budget_too_small_raises():
+    import repro.core as C
+
+    pg = C.partition(_weighted_graph(), 1, "grid(1,1)")
+    with pytest.raises(ValueError, match="budget_bytes"):
+        pg.shard_source(budget_bytes=16)
+
+
+def test_stream_config_validation():
+    from repro.core import StreamConfig
+
+    with pytest.raises(ValueError, match="not both"):
+        StreamConfig(windows=4, budget_bytes=1 << 20)
+    with pytest.raises(ValueError, match="windows"):
+        StreamConfig(windows=0)
+
+
+def test_stream_needs_grid_partition():
+    import repro.core as C
+    from repro.core import Engine
+
+    pg = C.partition(_weighted_graph(), 1, "contiguous")
+    with pytest.raises(ValueError, match="grid"):
+        Engine(pg, residency="stream")
+    with pytest.raises(ValueError, match="grid"):
+        pg.shard_source(windows=2)
+
+
+def test_stream_engine_guards():
+    import repro.core as C
+    from repro.core import Engine, StreamConfig
+
+    g = _weighted_graph()
+    eng = _stream_engine(g)
+    # the streamed schedule is a barrier loop; resident-only features refuse
+    with pytest.raises(ValueError, match="resident"):
+        eng.run("sssp", source=3, residency="resident")
+    with pytest.raises(ValueError, match="overlap"):
+        eng.run("sssp", source=3, sync="overlap")
+    with pytest.raises(ValueError, match="replan"):
+        eng.run("sssp", source=3, replan="grid(1,1)")
+    with pytest.raises(ValueError, match="batch|stream"):
+        eng.run_batch("sssp", sources=[0, 1], batch=2)
+    with pytest.raises(ValueError, match="resident"):
+        eng.step_hlo("sssp")
+    # and a resident engine refuses to stream (the planes are already up)
+    res = _resident_engine(g)
+    with pytest.raises(ValueError, match="stream"):
+        res.run("sssp", source=3, residency="stream")
+    # stream config without the residency is a construction error
+    pg = C.partition(g, 1, "grid(1,1)")
+    with pytest.raises(ValueError, match="residency"):
+        Engine(pg, stream=StreamConfig(windows=2))
+
+
+# ---------------------------------------------------------------------------
+# Disk layout cache: cold populates, warm memory-maps, prep gets faster
+# ---------------------------------------------------------------------------
+
+
+def test_disk_cache_cold_then_warm_bit_exact(tmp_path):
+    g = _weighted_graph()
+    ref, ref_it = _resident_engine(g).run("sssp", source=3)
+    d = str(tmp_path / "layouts")
+
+    cold_eng = _stream_engine(g, cache_dir=d)
+    cold, it_c = cold_eng.run("sssp", source=3)
+    entries = [e for e in os.listdir(d) if e.startswith("layout_")]
+    assert len(entries) == 1  # cold run persisted the layout
+
+    # eager=False defers the layout build, so a warm hit memory-maps the
+    # cached planes and never sorts; an eager partition would already hold
+    # the layout in memory and cached_layout rightly prefers that copy
+    warm_eng = _stream_engine(g, cache_dir=d, eager=False)
+    warm, it_w = warm_eng.run("sssp", source=3)
+    assert warm_eng.dispatch["stream"]["origin"] == "disk"
+    for got, it in ((cold, it_c), (warm, it_w)):
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+        assert it == ref_it
+
+
+def test_warm_cache_prep_speedup(tmp_path):
+    """The ISSUE 8 acceptance bound: warm (mmap) prep >= 2x faster than the
+    cold build+persist, measured best-of-N on a layout big enough that the
+    sort dominates the timer.  partition(eager=False) is the contract --
+    the warm path must never run the argsort at all."""
+    import repro.core as C
+
+    g = _weighted_graph(scale=17, edges=1_200_000, seed=5)
+    d = str(tmp_path / "layouts")
+
+    def prep():
+        pg = C.partition(g, 1, "grid(1,1)", eager=False)
+        return pg.shard_source(windows=4, cache_dir=d)
+
+    assert prep().origin == "memory"  # cold: built in memory, persisted
+
+    def cold():
+        import shutil
+
+        shutil.rmtree(d)
+        prep()
+
+    def warm():
+        assert prep().origin == "disk"
+
+    t_cold, t_warm = conftest.race(cold, warm, repeats=3)
+    prep()  # leave the cache warm for the assertion message
+    assert t_cold >= 2.0 * t_warm, (t_cold, t_warm)
+
+
+def test_stale_cache_entry_is_a_miss(tmp_path):
+    """A different graph fingerprints to a different entry: no false hits."""
+    import repro.core as C
+
+    d = str(tmp_path / "layouts")
+    C.partition(_weighted_graph(seed=1), 1, "grid(1,1)",
+                eager=False).shard_source(windows=2, cache_dir=d)
+    sb = C.partition(_weighted_graph(seed=2), 1, "grid(1,1)",
+                     eager=False).shard_source(windows=2, cache_dir=d)
+    assert sb.origin == "memory"  # second graph missed and rebuilt
+    assert len([e for e in os.listdir(d) if e.startswith("layout_")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# On-device layout build (prep at scale): bit-identical to the host radix
+# ---------------------------------------------------------------------------
+
+
+def test_device_build_bit_identical(monkeypatch):
+    import repro.core as C
+
+    g = _weighted_graph(scale=12, edges=30000, seed=7)
+
+    def layout(mode):
+        monkeypatch.setenv("REPRO_DEVICE_BUILD", mode)
+        return C.partition(g, 1, "grid(1,1)", eager=False)._layout("grid")
+
+    host = layout("host")
+    dev = layout("device")
+    for h, d, name in zip(host, dev, ("src", "dst", "weight", "band")):
+        assert np.array_equal(np.asarray(h), np.asarray(d)), name
+
+
+def test_device_build_streamed_end_to_end(monkeypatch):
+    """The device-built layout feeds the streamed run unchanged."""
+    g = _weighted_graph()
+    ref, ref_it = _resident_engine(g).run("sssp", source=3)
+    monkeypatch.setenv("REPRO_DEVICE_BUILD", "device")
+    got, it = _stream_engine(g).run("sssp", source=3)
+    assert np.array_equal(np.asarray(got), np.asarray(ref)) and it == ref_it
+
+
+# ---------------------------------------------------------------------------
+# Scale-20 acceptance cell (slow): budget-bound streaming with overlap
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_scale20_streamed_under_budget():
+    """The tentpole acceptance: a scale-20 RMAT stand-in runs SSSP and BFS
+    end-to-end with the device edge working set capped at 20% of the total
+    edge-layout bytes (a budget the resident path provably exceeds), stays
+    bit-exact vs the resident engine, and the prefetch pipeline hides
+    enough copy time that overlap efficiency clears 0.5 (best-of-3 -- the
+    metric measures pipeline structure, but a loaded CI host can still
+    starve the probe)."""
+    import repro.core as C
+    from repro.core import Engine, StreamConfig
+
+    g = C.random_weights(C.rmat(20, 2_500_000, seed=7))
+    pg_ref = C.partition(g, 1, "grid(1,1)")
+    ref_s, it_s = Engine(pg_ref).run("sssp", source=0)
+    ref_b, it_b = Engine(pg_ref).run("bfs", source=0)
+
+    total = pg_ref.shard_source(windows=1).total_edge_bytes
+    budget = int(0.20 * total)
+    pg = C.partition(g, 1, "grid(1,1)")
+    eng = Engine(pg, residency="stream",
+                 stream=StreamConfig(budget_bytes=budget))
+    st = eng.dispatch["stream"]
+    assert st["resident_edge_bytes"] <= budget < st["total_edge_bytes"]
+    assert st["edge_fraction_resident"] <= 0.25
+
+    best = 0.0
+    for _ in range(3):
+        got, it = eng.run("sssp", source=0)
+        assert np.array_equal(np.asarray(got), np.asarray(ref_s))
+        assert it == it_s
+        best = max(best, eng.dispatch["stream"]["overlap_efficiency"])
+    assert best >= 0.5, eng.dispatch["stream"]
+    assert eng.dispatch["stream"]["edge_bandwidth_bytes_per_s"] > 0
+
+    got_b, it = eng.run("bfs", source=0)
+    assert np.array_equal(np.asarray(got_b), np.asarray(ref_b))
+    assert it == it_b
