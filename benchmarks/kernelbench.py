@@ -170,6 +170,47 @@ def batched_cost_model(pg, B, layout="sd", weighted=False):
     }
 
 
+def fixediter_cost_model(pg, B, iters=20, layout="sd", weighted=False):
+    """Amortization model for the FIXED-ITERATION batched plane
+    (personalized PageRank et al., DESIGN.md section 14): the per-superstep
+    roofline of ``batched_cost_model`` times exactly ``iters`` supersteps.
+
+    Two things distinguish it from the convergence model: every query
+    column runs the same counted loop (no per-query mask, no [B] active
+    psum per superstep -- modeled as a per-superstep ``mask_bytes`` term
+    the sequential side pays via its B separate loop dispatches), and the
+    sequential baseline re-streams the edge layout ``iters`` times PER
+    QUERY, so the B-fold edge-stream amortization compounds over the whole
+    fixed run rather than racing a convergence frontier.
+    """
+    band = pg.sd_band if layout == "sd" else pg.band
+    E, V, S = (pg.edge_valid.shape[1], pg.chunk_size,
+               pg.num_chunks * pg.chunk_size)
+    chares = pg.num_chunks
+    ne = num_edge_blocks(E)
+    tiles = band_tiles(np.asarray(band))
+    tile_flops = 2 * BLOCK_E * BLOCK_V
+    edge_bytes = chares * E * 4 * (4 if weighted else 3) + chares * ne * 4 * 4
+    vert_bytes = chares * (V + S) * 4
+    mask_bytes = chares * S * 4  # frontier plane the counted loop drops
+
+    def t(b, masked):
+        hbm = (edge_bytes + vert_bytes * b
+               + (mask_bytes * b if masked else 0)) / 819e9
+        mxu = tiles * tile_flops * b / 197e12
+        return iters * max(hbm, mxu)
+
+    seq_s, batched_s = t(1, masked=True), t(B, masked=False) / B
+    return {
+        "B": B, "iters": iters,
+        "seq_s_per_query": seq_s,
+        "batched_s_per_query": batched_s,
+        "queries_per_sec_seq": 1.0 / seq_s,
+        "queries_per_sec_batched": 1.0 / batched_s,
+        "speedup": seq_s / batched_s,
+    }
+
+
 def streaming_cost_model(pg, windows=8):
     """Bandwidth/compute roofline of the double-buffered window schedule
     (DESIGN.md section 13): is each window's H2D copy hidden behind the

@@ -16,6 +16,11 @@ Prints ``name,seconds_or_value,derived`` CSV rows:
   throughput.* batched multi-query serving: measured queries/sec (batched
              [*, B] plane vs per-query loop at a fixed superstep budget)
              plus the TPU amortization model (also in BENCH_cost.json)
+  serving.*  deadline-aware serving: measured queries/sec-vs-p50/p99
+             latency curve (mixed bfs + personalized_pagerank traffic
+             under DeadlinePolicy at several offered loads), the batched
+             personalized-pagerank amortization, and the fixed-iter plane
+             model (also in BENCH_cost.json)
   grid.*     2-D grid partitioning: per-rectangle skew + two-phase-reduce
              wire bytes vs the best 1-D variant (also in BENCH_cost.json)
   async.*    barrier-relaxed execution: measured barrier-vs-overlap SSSP
@@ -188,6 +193,41 @@ def main():
          f"{tp['measured_speedup']:.2f}",
          f"budget={tp['superstep_budget']} supersteps")
     cost_json["throughput"] = {**tp, "model": bm}
+
+    # ---- deadline-aware serving (DESIGN.md section 14) ---------------------
+    fm = kernelbench.fixediter_cost_model(pg, 16, iters=8)
+    emit("serving.model.ppr_speedup@B16", f"{fm['speedup']:.2f}",
+         f"fixed-iter plane, {fm['iters']} supersteps/query")
+    ppr = tables.throughput_table(scale_log2=scale, repeats=repeats,
+                                  algo="personalized_pagerank", B=16)
+    emit(f"serving.{ppr['graph']}.ppr.batched@B{ppr['B']}",
+         f"{ppr['qps_batched']:.2f}", "queries/s")
+    emit(f"serving.{ppr['graph']}.ppr.measured_speedup",
+         f"{ppr['measured_speedup']:.2f}",
+         f"budget={ppr['superstep_budget']} supersteps (>=3x enforced in "
+         f"tests/test_graph_serve.py)")
+    lt = tables.latency_table(scale_log2=min(scale, 11))
+    emit("serving.capacity_qps", f"{lt['capacity_qps']:.2f}",
+         f"B={lt['B']} dispatch={lt['dispatch_s']:.4f}s slo={lt['slo_s']:.4f}s")
+    prev = None
+    for row in lt["curve"]:
+        emit(f"serving.{lt['graph']}.load{row['load']:g}x",
+             f"{row['p50_s']:.4f}",
+             f"p99={row['p99_s']:.4f}s offered={row['offered_qps']:.1f}q/s "
+             f"achieved={row['achieved_qps']:.1f}q/s "
+             f"fill={row['mean_fill']:.1f}/{lt['B']} "
+             f"missed={row['missed_frac']:.2f}")
+        if prev is not None:
+            # latency is monotone in offered load (15% tolerance absorbs
+            # the flat head of the curve, where under-full early dispatch
+            # makes light loads pay ~the SLO slack either way)
+            assert row["p50_s"] >= 0.85 * prev["p50_s"], (prev, row)
+            assert row["p99_s"] >= 0.85 * prev["p99_s"], (prev, row)
+        prev = row
+    first, last = lt["curve"][0], lt["curve"][-1]
+    assert last["p99_s"] >= 1.2 * first["p99_s"], \
+        f"latency curve is flat across offered loads: {lt['curve']}"
+    cost_json["serving"] = {**lt, "ppr_throughput": ppr, "model": fm}
 
     # ---- barrier-relaxed async execution (DESIGN.md section 12) ------------
     at = tables.async_table(scale_log2=scale, repeats=repeats)

@@ -110,12 +110,15 @@ def throughput_table(scale_log2: int = 13, algo: str = "bfs", B: int = 16,
     rng = np.random.default_rng(0)
     sources = [int(s) for s in rng.integers(0, g.num_vertices, B)]
 
+    # convergence programs take a superstep budget via max_iters; fixed-iter
+    # programs (the pagerank family) spell the same knob "iters"
+    cap = {"iters" if "iters" in spec.defaults else "max_iters": budget}
     run_batched = lambda: eng.run_batch(algo, sources=sources, batch=B,
-                                        max_iters=budget)
+                                        **cap)
     run_batched()  # compile outside the timed region
     t_batched = bench(run_batched, repeats)
-    run_seq = lambda: [eng.run_batch(algo, sources=[s], batch=1,
-                                     max_iters=budget) for s in sources]
+    run_seq = lambda: [eng.run_batch(algo, sources=[s], batch=1, **cap)
+                       for s in sources]
     run_seq()
     t_seq = bench(run_seq, repeats)
     return {
@@ -124,6 +127,117 @@ def throughput_table(scale_log2: int = 13, algo: str = "bfs", B: int = 16,
         "qps_batched": B / t_batched, "qps_seq": B / t_seq,
         "measured_speedup": t_seq / t_batched,
     }
+
+
+def latency_table(scale_log2: int = 11, B: int = 8,
+                  loads=(0.25, 1.0, 4.0), queries_per_load: int | None = None,
+                  ppr_iters: int = 8, slo_factor: float = 1.5,
+                  dskey: str = "soc-lj1-mini", seed: int = 0) -> dict:
+    """Measured queries/sec-vs-latency curve for the deadline-aware server
+    (DESIGN.md section 14): mixed bfs + personalized_pagerank traffic (3:1)
+    through ``GraphQueryServer`` under ``DeadlinePolicy``, at several
+    offered loads.
+
+    Arrivals are open-loop at fixed spacing ``1/rate`` on the server's
+    ``VirtualClock`` -- the schedule is deterministic while every service
+    time is the measured wall-clock of its real ``run_batch`` dispatch, so
+    the curve is reproducible without being synthetic.  ``loads`` are
+    multiples of the measured full-plane capacity ``B / dispatch_time``;
+    each query carries an SLO of ``slo_factor`` x one dispatch time, which
+    is what lets the policy dispatch under-full planes at the light end of
+    the curve instead of holding forever.
+
+    -> dict with the measured capacity/SLO and one row per load:
+    offered/achieved qps, p50/p99 latency, deadline-miss fraction, and the
+    mean plane fill (tracked in BENCH_cost.json's ``serving`` section).
+    """
+    import math
+    from collections import deque
+
+    import numpy as np
+
+    from repro.launch.serve import (DeadlinePolicy, GraphQueryServer,
+                                    VirtualClock)
+
+    g = load_dataset(dskey, scale_log2=scale_log2)
+    eng = Engine(partition(g, 1))
+    rng = np.random.default_rng(seed)
+    # 8B queries per load: the overloaded points then queue ~(N/B)(1-1/L)
+    # dispatches of tail wait (~7 t_d at 4x) vs ~1 t_d at light load, so
+    # the curve's rise dwarfs per-dispatch timing noise (with only 4B the
+    # overload regimes are all "everything arrives at once" and the p99
+    # ordering can invert on dispatch-time jitter alone)
+    N = (8 * B) if queries_per_load is None else int(queries_per_load)
+
+    def traffic(n):
+        out = []
+        for q in range(n):
+            src = int(rng.integers(g.num_vertices))
+            if q % 4 == 3:
+                out.append(("personalized_pagerank", src,
+                            dict(iters=ppr_iters)))
+            else:
+                out.append(("bfs", src, {}))
+        return out
+
+    # warm both compiled planes, then measure the dispatch-time EWMA the
+    # policy's slack rule (and the capacity estimate) run on over a second,
+    # fully-warm drain -- the first pass's compile time would otherwise
+    # inflate the estimate ~10x and mis-scale every offered load
+    warm = GraphQueryServer(eng, batch=B, policy=DeadlinePolicy(),
+                            clock=VirtualClock())
+    for prog, src, kw in traffic(2 * B):
+        warm.submit(prog, src, **kw)
+    warm.drain()
+    warm.dispatch_time = None
+    for prog, src, kw in traffic(2 * B):
+        warm.submit(prog, src, **kw)
+    warm.drain()
+    t_d = warm.dispatch_time
+    capacity = B / t_d
+    slo = slo_factor * t_d
+
+    rows = []
+    for load in loads:
+        rate = load * capacity
+        clock = VirtualClock()
+        server = GraphQueryServer(eng, batch=B, policy=DeadlinePolicy(),
+                                  clock=clock)
+        server.dispatch_time = t_d  # seed the EWMA with the warm estimate
+        arrivals = deque((i / rate, prog, src, kw)
+                         for i, (prog, src, kw) in enumerate(traffic(N)))
+        while arrivals or server.pending():
+            while arrivals and arrivals[0][0] <= clock.now + 1e-12:
+                _, prog, src, kw = arrivals.popleft()
+                server.submit(prog, src, deadline=slo, **kw)
+            if server.step():
+                continue  # dispatched; the clock advanced by the measured dt
+            # held (or idle): jump to the next event -- the next arrival or
+            # the moment the queue head's slack triggers early dispatch
+            nxt = arrivals[0][0] if arrivals else math.inf
+            trig = math.inf
+            if server.pending():
+                dls = [r.deadline for r in server.queued()
+                       if r.deadline is not None]
+                if dls:
+                    trig = min(dls) - server.dispatch_time
+            target = min(nxt, trig)
+            clock.advance(max(target - clock.now, 1e-9))
+        lat = sorted(s.latency for s in server.stats.values())
+        makespan = max(clock.now, 1e-9)
+        rows.append({
+            "load": load, "offered_qps": rate,
+            "achieved_qps": N / makespan,
+            "p50_s": lat[len(lat) // 2],
+            "p99_s": lat[min(len(lat) - 1, int(0.99 * len(lat)))],
+            "missed_frac": sum(s.deadline_missed
+                               for s in server.stats.values()) / len(lat),
+            "dispatches": server.dispatches,
+            "mean_fill": N / max(server.dispatches, 1),
+        })
+    return {"graph": dskey, "B": B, "queries_per_load": N,
+            "capacity_qps": capacity, "dispatch_s": t_d, "slo_s": slo,
+            "curve": rows}
 
 
 def wire_batch_table(scale_log2: int = 13, pes: int = 64,

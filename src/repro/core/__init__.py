@@ -25,7 +25,8 @@ from repro.core.engine import (Engine, ReplanPolicy, StreamConfig,
 from repro.core.programs import (VertexProgram, ProgramSpec, make_program,
                                  get_spec, registered_names, run_parallel,
                                  sssp_serial, bfs_serial,
-                                 pagerank_weighted_serial)
+                                 pagerank_weighted_serial,
+                                 personalized_pagerank_serial)
 from repro.core.pagerank import pagerank_serial, pagerank_parallel
 from repro.core.labelprop import (labelprop_serial, labelprop_parallel,
                                   components_oracle)

@@ -933,18 +933,21 @@ class Engine:
 
     # -- batched multi-query execution (DESIGN.md section 11) ----------------
 
-    def _smap_batch(self, body):
+    def _smap_batch(self, body, qplane=False):
         """shard_map wrapper for the batched plane: state/frontier are
         [C, K, B] (chare-sharded on the leading axis, batch trailing), the
         step bound [C, 1], outputs (state, frontier, per-query iters,
-        per-shard skipped launches)."""
+        per-shard skipped launches).  ``qplane`` adds the per-query
+        read-only operand (personalized teleport vectors), sharded exactly
+        like the state plane."""
         arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
                      for k, v in self.arrays.items()}
         aux_specs = {k: P(AXIS, None) for k in self.aux}
+        qp_specs = (P(AXIS, None, None),) if qplane else ()
         return compat.shard_map(
             body, mesh=self.mesh,
             in_specs=(arr_specs, aux_specs, P(AXIS, None, None),
-                      P(AXIS, None, None), P(AXIS, None)),
+                      P(AXIS, None, None)) + qp_specs + (P(AXIS, None),),
             out_specs=(P(AXIS, None, None), P(AXIS, None, None),
                        P(AXIS, None), P(AXIS, None)),
             check_vma=False)
@@ -965,12 +968,18 @@ class Engine:
         """
         comb = program.combiner
         convergence = program.fixed_iters is None
+        has_qp = program.query_plane is not None
 
-        def body(arrs, aux, s0, f0, nsteps):
+        def body(arrs, aux, s0, f0, *rest):
+            qp, nsteps = (rest if has_qp else (None,) + rest)
             arrs = {k: v[0] for k, v in arrs.items()}
             # aux planes are per-vertex [K]; expose them as [K, 1] so the
             # program's update/apply lambdas broadcast over the batch axis
             aux = {k: v[0][:, None] for k, v in aux.items()}
+            if has_qp:
+                # the per-query operand is already [K, B]: merged after the
+                # broadcast expansion so programs read it at full rank
+                aux["qplane"] = qp[0]
             push = self._push_closure(program, gate, arrs)
             p2 = lambda partial: self._phase2(partial, arrs, comb)
             sent = jnp.asarray(comb.identity, s0.dtype)
@@ -1020,7 +1029,7 @@ class Engine:
                 drained = program.apply(state, p2(pending), aux)
                 frontier = frontier | (drained != state)
                 state = drained
-            else:
+            elif convergence:
 
                 def cond(carry):
                     _, _, active, it, _, _ = carry
@@ -1028,28 +1037,40 @@ class Engine:
 
                 def step(carry):
                     state, frontier, active, it, q_it, sk = carry
-                    if convergence:
-                        vals = jnp.where(frontier,
-                                         program.update(state, aux), sent)
-                        partial, pushed = push(vals, frontier)
-                    else:
-                        vals = program.update(state, aux)
-                        partial, pushed = push(vals,
-                                               jnp.ones_like(f0[0] != 0))
+                    vals = jnp.where(frontier,
+                                     program.update(state, aux), sent)
+                    partial, pushed = push(vals, frontier)
                     new = program.apply(state, p2(partial), aux)
                     delta = new != state
-                    changed = active_of(delta) if convergence \
-                        else jnp.ones((B,), bool)
+                    changed = active_of(delta)
                     return (new, delta, changed, it + 1,
                             q_it + active.astype(jnp.int32),
                             sk + 1 - pushed.astype(jnp.int32))
 
-                active0 = active_of(f0[0] != 0) if convergence \
-                    else jnp.ones((B,), bool)
+                active0 = active_of(f0[0] != 0)
                 state, frontier, _, it, q_it, sk = jax.lax.while_loop(
                     cond, step,
                     (s0[0], f0[0] != 0, active0, jnp.asarray(0),
                      jnp.zeros((B,), jnp.int32), zero_sk))
+            else:
+                # fixed-iteration programs (pagerank family): every query
+                # column runs exactly ``limit`` supersteps, so the per-query
+                # convergence mask degenerates to a constant -- skip it
+                # entirely and run the plain counted loop (DESIGN.md
+                # section 14).  The frontier is all-ones throughout (no
+                # gating: _validate_async already rejects gate='frontier'
+                # for fixed-iter programs).
+                ones = jnp.ones_like(f0[0] != 0)
+
+                def fstep(_, state):
+                    partial, _ = push(program.update(state, aux), ones)
+                    return program.apply(state, p2(partial), aux)
+
+                state = jax.lax.fori_loop(0, limit, fstep, s0[0])
+                frontier = ones
+                it = limit
+                q_it = jnp.full((B,), limit, jnp.int32)
+                sk = zero_sk
             slots = it + (1 if (convergence and sync == "overlap") else 0)
             stats = jnp.stack([sk, slots.astype(jnp.int32)])[None]
             return (state[None], frontier.astype(jnp.int32)[None],
@@ -1071,27 +1092,30 @@ class Engine:
         the B bucket."""
         key = tuple(kv for kv in program.key
                     if not (isinstance(kv, tuple)
-                            and kv[0] in ("source", "sources", "pivots")))
+                            and kv[0] in ("source", "sources", "pivots",
+                                          "seeds")))
         return key + (("batch", B),)
 
     def _run_batch_segment(self, program, B, state, frontier, nsteps,
-                           sync="barrier", gate=False):
+                           sync="barrier", gate=False, qp=None):
         key = (self._batch_key(program, B), "segment", sync, gate)
         fn = self._compiled.get(key)
         if fn is None:
             fn = jax.jit(self._smap_batch(
-                self._make_batch_body(program, sync, gate)))
+                self._make_batch_body(program, sync, gate),
+                qplane=program.query_plane is not None))
             self._compiled[key] = fn
         bound = jnp.full((self._C, 1), nsteps, jnp.int32)
-        state, frontier, q_it, stats = fn(self.arrays, self.aux, state,
-                                          frontier, bound)
+        operands = (state, frontier) + (() if qp is None else (qp,))
+        state, frontier, q_it, stats = fn(self.arrays, self.aux, *operands,
+                                          bound)
         stats = np.asarray(jax.device_get(stats))
         self._gate_skipped += int(stats[:, 0].sum())
         self._gate_slots += int(stats[:, 1].sum())
         return state, frontier, np.asarray(jax.device_get(q_it))[0]
 
     def _run_batch_replanned(self, program, B, padded_sets, state, frontier,
-                             policy, sync="barrier", gate=False):
+                             policy, sync="barrier", gate=False, qp=None):
         """Batched twin of ``_run_replanned``: the skew trigger sees the
         frontier collapsed over queries (a vertex is frontier-active if ANY
         query still touches it), and the state move carries the whole
@@ -1104,7 +1128,7 @@ class Engine:
         while done < limit:
             state, frontier, q_it = self._run_batch_segment(
                 program, B, state, frontier, min(policy.every, limit - done),
-                sync, gate)
+                sync, gate, qp)
             q_iters += q_it
             # the longest-still-active query is active for every executed
             # superstep, so its count IS the segment's global step count
@@ -1125,6 +1149,10 @@ class Engine:
             init = program.init_batch(new_pg, padded_sets)
             state, frontier = self._move_state(init, state, frontier, new_pg)
             self._rebind(new_pg)
+            if program.query_plane is not None:
+                # the read-only per-query operand is a pure function of the
+                # placement: rebuild for the new layout instead of relabeling
+                qp = jnp.asarray(program.query_plane(new_pg, padded_sets))
             replans += 1
         return state, q_iters
 
@@ -1163,6 +1191,13 @@ class Engine:
         sync, gate = self._validate_async(program, sync, gate)
         if sources is None:
             sources = program.sources
+        if sources is not None and not isinstance(sources, (int, np.integer)):
+            sources = tuple(sources)
+            if not sources:
+                # caught here (not at the padding line below) so callers --
+                # the serving loop above all -- get an actionable message
+                raise ValueError("run_batch needs at least one query "
+                                 "(sources is empty)")
         sets = prog_mod.seed_sets(sources)
         n = len(sets)
         B = self._bucket(n) if batch is None else int(batch)
@@ -1171,23 +1206,28 @@ class Engine:
         padded = sets + (sets[0],) * (B - n)
         state = jnp.asarray(program.init_batch(self.pg, padded))
         frontier = jnp.ones((self._C, self._K, B), jnp.int32)
+        qp = (jnp.asarray(program.query_plane(self.pg, padded))
+              if program.query_plane is not None else None)
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
         self._gate_skipped = self._gate_slots = 0
         if replan is not None:
             state, q_it = self._run_batch_replanned(program, B, padded,
                                                     state, frontier, replan,
-                                                    sync, gate)
+                                                    sync, gate, qp)
         else:
             state, _, q_it = self._run_batch_segment(program, B, state,
                                                      frontier, limit, sync,
-                                                     gate)
+                                                     gate, qp)
         self._record_gate(sync, gate)
         # un-permute each query column to original vertex order (for grids,
         # g2l points at the column-0 replica slots)
         plane = np.asarray(jax.device_get(state)).reshape(
             self._C * self._K, B)[self.pg.global_to_local]
-        return plane.T[:n].copy(), np.asarray(q_it[:n], np.int64)
+        out = plane.T[:n].copy()
+        if program.finalize_batch is not None:
+            out = program.finalize_batch(self.pg.graph, sets, out)
+        return out, np.asarray(q_it[:n], np.int64)
 
     def _move_state(self, init_state, state, frontier, new_pg):
         """Carry state across a replan: plan B's ``g2l`` on top of plan A's

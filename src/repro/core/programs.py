@@ -67,6 +67,17 @@ class VertexProgram:
     # post-processing of the converged per-query planes (e.g. the Brandes
     # accumulation turning BFS depths into centrality scores).
     finalize: Callable | None = None
+    # query_plane(pg, seed_sets) -> [C, K, B] per-query per-vertex operand
+    # (personalized PageRank's teleport vectors); the engine threads it
+    # through shard_map and exposes the local [K, B] shard to update/apply
+    # as ``aux["qplane"]``.  Unlike seed state it is read-only: replans
+    # rebuild it for the new placement instead of relabeling it.
+    query_plane: Callable | None = None
+    # finalize_batch(graph, seed_sets, plane[n, V]) -> plane[n, V]; applied
+    # by ``run_batch`` itself to every returned plane (per-query column
+    # normalization), so direct run_batch callers and the Engine.run
+    # routing see the same rows.
+    finalize_batch: Callable | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,12 +223,20 @@ def _index_state(pg: PartitionedGraph, fill, dtype, source: int | None = None,
 # ---------------------------------------------------------------------------
 
 
+def _zeros_plane(pg, seeds):
+    """Batched init for fixed-iter add-monoid programs: every query column
+    starts from the same all-zero state (the seed dependence, if any, rides
+    in the ``query_plane`` operand instead)."""
+    return np.zeros((pg.num_chunks, pg.chunk_size, len(seeds)), np.float32)
+
+
 def _make_pagerank(alpha: float = 0.85, iters: int = 20) -> VertexProgram:
     return VertexProgram(
         name="pagerank",
         key=_cache_key("pagerank", dict(alpha=alpha, iters=iters)),
         combiner=strat.ADD,
         init=lambda pg: np.zeros((pg.num_chunks, pg.chunk_size), np.float32),
+        init_batch=_zeros_plane,
         update=lambda a, aux: alpha * a / _f32(aux["out_degree"]),
         edge_value=None,
         apply=lambda a, inc, aux: (1.0 - alpha + inc) * _f32(aux["vertex_valid"]),
@@ -232,6 +251,7 @@ def _make_pagerank_weighted(alpha: float = 0.85, iters: int = 20) -> VertexProgr
         key=_cache_key("pagerank_weighted", dict(alpha=alpha, iters=iters)),
         combiner=strat.ADD,
         init=lambda pg: np.zeros((pg.num_chunks, pg.chunk_size), np.float32),
+        init_batch=_zeros_plane,
         update=lambda a, aux: alpha * a / aux["out_weight"],
         edge_value=lambda v, w: v * w,
         edge_semiring="weight",
@@ -255,6 +275,92 @@ def pagerank_weighted_serial(graph: Graph, alpha: float = 0.85,
         a = np.full(n, 1.0 - alpha, dtype=np.float32)
         a += np.bincount(dst, weights=b[src] * w, minlength=n).astype(np.float32)
     return a
+
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank: per-query teleport vectors on the batched plane
+# (ROADMAP direction #1; DESIGN.md section 14)
+# ---------------------------------------------------------------------------
+
+
+def _teleport_plane(pg: PartitionedGraph, sets) -> np.ndarray:
+    """[C, K, B] teleport operand: column b carries 1/|S_b| at query b's
+    seed vertices and 0 elsewhere.  Seeds land through ``local_to_global``
+    so grid partitions carry the mass on every row replica (exactly like
+    ``_index_state``); padding slots (l2g < 0) stay 0 and are additionally
+    zeroed by ``vertex_valid`` in apply."""
+    n = pg.num_chunks * pg.chunk_size
+    t = np.zeros((n, len(sets)), np.float32)
+    for b, seeds in enumerate(sets):
+        for v in seeds:
+            if not 0 <= v < pg.graph.num_vertices:
+                raise ValueError(f"source {v} out of range")
+            t[pg.local_to_global == v, b] = 1.0 / len(seeds)
+    return t.reshape(pg.num_chunks, pg.chunk_size, len(sets))
+
+
+def _ppr_normalize(graph: Graph, sets, plane: np.ndarray) -> np.ndarray:
+    """Per-query column normalization: each query's scores sum to 1 (mass
+    lost to dangling vertices is renormalized away, the standard PPR
+    convention)."""
+    plane = np.asarray(plane, np.float32)
+    sums = plane.sum(axis=-1, keepdims=True)
+    return np.where(sums > 0, plane / sums, plane).astype(np.float32)
+
+
+def _make_personalized_pagerank(seeds=(0,), alpha: float = 0.85,
+                                iters: int = 20) -> VertexProgram:
+    """PPR toward one seed set: a <- (1-alpha) * t_S(v) + alpha * sum_in
+    a(u)/deg(u), t_S uniform on S.  ``seeds`` is ONE seed set (the default
+    single query); ``Engine.run`` routes it through the batched plane at
+    B=1, and ``run_batch(sources=[set_1, ..., set_B])`` serves B seed sets
+    off one edge sweep.  update/apply only ever run inside the batched
+    body, where the engine exposes the teleport plane as ``aux['qplane']``.
+    """
+    if isinstance(seeds, (int, np.integer)):
+        seeds = (int(seeds),)
+    seeds = tuple(int(v) for v in seeds)
+    return VertexProgram(
+        name="personalized_pagerank",
+        key=_cache_key("personalized_pagerank",
+                       dict(seeds=seeds, alpha=alpha, iters=iters)),
+        combiner=strat.ADD,
+        init=lambda pg: np.zeros((pg.num_chunks, pg.chunk_size), np.float32),
+        init_batch=_zeros_plane,
+        update=lambda a, aux: alpha * a / _f32(aux["out_degree"]),
+        edge_value=None,
+        apply=lambda a, inc, aux:
+            ((1.0 - alpha) * aux["qplane"] + inc) * _f32(aux["vertex_valid"]),
+        fixed_iters=iters,
+        sources=(seeds,),
+        query_plane=_teleport_plane,
+        finalize=lambda graph, sets, plane:
+            plane[0] if len(sets) == 1 else plane,
+        finalize_batch=_ppr_normalize,
+    )
+
+
+def personalized_pagerank_serial(graph: Graph, seeds=(0,), alpha: float = 0.85,
+                                 iters: int = 20) -> np.ndarray:
+    """Serial COST baseline: same Jacobi iteration as the engine (float32,
+    zero init, (1-alpha)*t + alpha-scaled degree-normalized push), then the
+    per-query normalization."""
+    if isinstance(seeds, (int, np.integer)):
+        seeds = (seeds,)
+    seeds = tuple(int(v) for v in seeds)
+    n = graph.num_vertices
+    src, dst = graph.src, graph.dst
+    deg = np.bincount(src, minlength=n).astype(np.float32)
+    D = np.where(deg > 0, deg, 1.0).astype(np.float32)
+    t = np.zeros(n, np.float32)
+    t[list(seeds)] = np.float32(1.0 / len(seeds))
+    a = np.zeros(n, np.float32)
+    for _ in range(iters):
+        b = np.float32(alpha) * a / D
+        a = np.float32(1.0 - alpha) * t
+        a += np.bincount(dst, weights=b[src], minlength=n).astype(np.float32)
+    s = a.sum()
+    return (a / s if s > 0 else a).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -478,3 +584,7 @@ register(ProgramSpec(
     name="betweenness", make=_make_betweenness, serial=betweenness_serial,
     defaults=dict(pivots=(0, 1, 2, 3), max_iters=10_000),
     returns_iters=True, table="table7"))
+register(ProgramSpec(
+    name="personalized_pagerank", make=_make_personalized_pagerank,
+    serial=personalized_pagerank_serial,
+    defaults=dict(seeds=(0,), alpha=0.85, iters=20), table="table8"))

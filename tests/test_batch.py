@@ -119,15 +119,37 @@ def test_run_batch_argument_errors():
     g = program_graph("bfs", "rmat6")
     eng = Engine(partition(g, 1))
     with pytest.raises(ValueError, match="batched init"):
-        eng.run_batch("pagerank", sources=[0])
+        eng.run_batch("labelprop", sources=[0])
     with pytest.raises(ValueError, match="sources"):
         eng.run_batch("bfs")  # bfs has no default source list
+    with pytest.raises(ValueError, match="at least one query"):
+        eng.run_batch("bfs", sources=[])
     with pytest.raises(ValueError, match="smaller"):
         eng.run_batch("bfs", sources=[0, 1, 2], batch=2)
     with pytest.raises(ValueError, match="out of range"):
         eng.run_batch("bfs", sources=[g.num_vertices])
     with pytest.raises(ValueError, match="empty seed set"):
         eng.run_batch("bfs", sources=[()])
+
+
+# ---------------------------------------------------------------------------
+# Fixed-iteration programs on the batched plane (DESIGN.md section 14)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["pagerank", "pagerank_weighted"])
+def test_fixed_iter_batched_plane_matches_run(algo):
+    """The pagerank family rides run_batch on the counted fori_loop segment:
+    every column equals the single-query Engine.run state bit-for-bit (the
+    seed is ignored -- all columns start from zeros) and the per-query count
+    is exactly fixed_iters, no convergence mask involved."""
+    g = program_graph(algo, "rmat6")
+    eng = Engine(partition(g, 1))
+    want, want_it = eng.run(algo, iters=9)
+    plane, q_it = eng.run_batch(algo, sources=[0, 5, 9], iters=9)
+    assert want_it == 9 and list(q_it) == [9, 9, 9]
+    for i in range(3):
+        np.testing.assert_array_equal(plane[i], want)
 
 
 # ---------------------------------------------------------------------------

@@ -139,6 +139,30 @@ for pes in (2, 8):
                 batch_ok &= want_it <= int(q_it[i]) <= 2 * want_it + 2
 results["batch_ok"] = bool(batch_ok)
 
+# ---- 1f) fixed-iteration batched plane: personalized PageRank columns of
+# one run_batch sweep vs per-query Engine.run references, across every 1-D
+# strategy at 2 and 8 PEs.  Fixed-iter programs keep the barrier (overlap is
+# rejected for them), so these cells ignore SYNC; every query must report
+# exactly the requested superstep count
+ppr_seeds = [(0,), (7, 91), (3, 5, 200)]
+ppr_ok = True
+ppr_err = 0.0
+for pes in (2, 8):
+    for strat in ("reduction", "sortdest", "basic", "pairs"):
+        eng = Engine(partition(g, pes, partitioner="edge_balanced"),
+                     strategy=strat)
+        plane, q_it = eng.run_batch("personalized_pagerank",
+                                    sources=ppr_seeds, batch=4, iters=6)
+        ppr_ok &= bool(np.all(np.asarray(q_it) == 6))
+        for i, seeds in enumerate(ppr_seeds):
+            want, want_it = eng.run("personalized_pagerank", seeds=seeds,
+                                    iters=6)
+            ppr_ok &= want_it == 6
+            ppr_err = max(ppr_err, float(np.max(np.abs(
+                np.asarray(plane[i]) - np.asarray(want)))))
+results["ppr_batch_ok"] = bool(ppr_ok)
+results["ppr_batch_err"] = ppr_err
+
 # ---- 2) sharded MoE == dense reference ------------------------------------
 from repro.models.config import ModelConfig
 from repro.models import moe as MOE
@@ -302,6 +326,22 @@ got, _ = run_parallel(g, "pagerank", num_pes=8, partitioner="contiguous",
 replan_err = float(np.max(np.abs(np.asarray(got) - refs["pagerank"][0])))
 results["grid_replan_ok"] = bool(replan_ok)
 results["grid_replan_pagerank_err"] = replan_err
+
+# ---- grid batched plane: personalized PageRank through run_batch on a 2-D
+# partitioner (teleport plane replicated across grid columns) vs per-query
+# Engine.run references
+from repro.core import Engine, partition
+ppr_seeds = [(0,), (3, 7)]
+eng = Engine(partition(g, 8, partitioner="grid(2,4)"))
+plane, q_it = eng.run_batch("personalized_pagerank", sources=ppr_seeds,
+                            iters=6)
+ppr_err = 0.0
+for i, seeds in enumerate(ppr_seeds):
+    want, _ = eng.run("personalized_pagerank", seeds=seeds, iters=6)
+    ppr_err = max(ppr_err, float(np.max(np.abs(
+        np.asarray(plane[i]) - np.asarray(want)))))
+results["grid_ppr_err"] = ppr_err
+results["grid_ppr_iters_ok"] = bool(np.all(np.asarray(q_it) == 6))
 
 print("RESULTS " + json.dumps(results))
 """
@@ -484,6 +524,8 @@ def test_grid2d_multidevice():
     assert res["grid_pagerank_err"] < 1e-6
     assert res["grid_replan_ok"]
     assert res["grid_replan_pagerank_err"] < 1e-6
+    assert res["grid_ppr_err"] <= 1e-6
+    assert res["grid_ppr_iters_ok"]
 
 
 @pytest.mark.slow
@@ -540,6 +582,8 @@ def test_multidevice_suite():
     assert res["replan_ok"]
     assert res["replan_pagerank_err"] < 1e-3
     assert res["batch_ok"]
+    assert res["ppr_batch_ok"]
+    assert res["ppr_batch_err"] <= 1e-6
     assert res["moe_err"] == 0.0
     assert res["ring_attn_err"] < 2e-6
     assert res["train_loss_delta"] < 1e-3
