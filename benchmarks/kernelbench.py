@@ -19,6 +19,7 @@ DESIGN.md section 8):
 
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -211,7 +212,7 @@ def fixediter_cost_model(pg, B, iters=20, layout="sd", weighted=False):
     }
 
 
-def streaming_cost_model(pg, windows=8):
+def streaming_cost_model(pg, windows=8, batch=1):
     """Bandwidth/compute roofline of the double-buffered window schedule
     (DESIGN.md section 13): is each window's H2D copy hidden behind the
     previous window's fused sweep on the modeled TPU?
@@ -223,15 +224,23 @@ def streaming_cost_model(pg, windows=8):
         t_serial = sum(copy) + sum(compute)
 
     with copy = window_bytes / host_link_bw (PCIe-class infeed) and
-    compute = max(tiles * tile_flops / MXU, window_bytes / HBM_BW) -- the
-    same constants as ``batched_cost_model``.  ``hiding`` is the fraction
-    of the serialized schedule the pipeline removes (1 would mean copies
-    are free); ``crossover_intensity`` is the flops/byte a window must
-    sustain for compute to fully hide its own copy
+    compute = max(tiles * tile_flops * batch / MXU, window_bytes / HBM_BW)
+    -- the same constants as ``batched_cost_model``.  ``hiding`` is the
+    fraction of the serialized schedule the pipeline removes (1 would mean
+    copies are free); ``crossover_intensity`` is the flops/byte a window
+    must sustain for compute to fully hide its own copy
     (MXU_FLOPS / HOST_LINK_BW) next to the layout's measured intensity --
     windows below the crossover are copy-bound and the streamed run pays
     the host link, exactly the regime the measured ``overlap_efficiency``
     in BENCH_cost.json's streaming section quantifies on this host.
+
+    ``batch`` prices the batched [*, B] query plane (DESIGN.md section 15):
+    each staged window is swept once for all B columns, so its copy time
+    is unchanged while its compute scales ~B-fold, raising the effective
+    intensity B x.  ``edge_bytes_per_query`` is the amortized H2D cost
+    (total / batch) and ``crossover_batch`` is the smallest B at which the
+    layout's B-scaled intensity clears the copy crossover -- above it the
+    streamed superstep leaves the copy-bound regime entirely.
     """
     HOST_LINK_BW = 16e9   # PCIe-class host->device infeed, bytes/s
     HBM_BW, MXU_FLOPS = 819e9, 197e12
@@ -246,17 +255,21 @@ def streaming_cost_model(pg, windows=8):
         wbytes = (bhi - blo) * per_block
         tiles = band_tiles(band[:, :, blo:bhi])
         copy.append(wbytes / HOST_LINK_BW)
-        comp.append(max(tiles * tile_flops / MXU_FLOPS, wbytes / HBM_BW))
+        comp.append(max(tiles * tile_flops * batch / MXU_FLOPS,
+                        wbytes / HBM_BW))
     t_serial = sum(copy) + sum(comp)
     t_pipe = copy[0] + sum(max(comp[i], copy[i + 1])
                            for i in range(len(copy) - 1)) + comp[-1]
     total_bytes = nb * per_block
     total_tiles = band_tiles(band)
     intensity = total_tiles * tile_flops / total_bytes
+    crossover = MXU_FLOPS / HOST_LINK_BW
     return {
         "windows": len(copy),
+        "batch": batch,
         "window_bytes": nbw * per_block,
         "total_edge_bytes": total_bytes,
+        "edge_bytes_per_query": total_bytes / batch,
         "copy_s": sum(copy),
         "compute_s": sum(comp),
         "pipelined_superstep_s": t_pipe,
@@ -264,7 +277,9 @@ def streaming_cost_model(pg, windows=8):
         "hiding": 1.0 - t_pipe / t_serial if t_serial else 0.0,
         "bound": "copy" if sum(copy) > sum(comp) else "compute",
         "intensity_flops_per_byte": intensity,
-        "crossover_intensity": MXU_FLOPS / HOST_LINK_BW,
+        "crossover_intensity": crossover,
+        "crossover_batch": int(max(1, math.ceil(crossover / intensity)))
+        if intensity else 1,
     }
 
 

@@ -208,7 +208,10 @@ def main():
          f"tests/test_graph_serve.py)")
     lt = tables.latency_table(scale_log2=min(scale, 11))
     emit("serving.capacity_qps", f"{lt['capacity_qps']:.2f}",
-         f"B={lt['B']} dispatch={lt['dispatch_s']:.4f}s slo={lt['slo_s']:.4f}s")
+         f"B={lt['B']} dispatch={lt['dispatch_s']:.4f}s "
+         f"slo_bfs={lt['slo_s']['bfs']:.4f}s "
+         f"slo_ppr={lt['slo_s']['personalized_pagerank']:.4f}s "
+         "(per-program measured budgets)")
     prev = None
     for row in lt["curve"]:
         emit(f"serving.{lt['graph']}.load{row['load']:g}x",
@@ -281,17 +284,35 @@ def main():
     emit("streaming.cache_prep_speedup", f"{stbl['cache_speedup']:.2f}",
          f"cold={stbl['cache_cold_s']:.3f}s warm={stbl['cache_warm_s']:.3f}s "
          "(mmap'd layout cache)")
-    sm = kernelbench.streaming_cost_model(
-        partition(load_dataset("soc-lj1-mini", scale_log2=scale,
-                               weighted=True), 1, "grid(1,1)"))
+    sb1, sb16 = stbl["batched"]["B1"], stbl["batched"]["B16"]
+    ratio = stbl["batched"]["bytes_per_query_ratio"]
+    # ISSUE 10 acceptance: B=16 streams <= 1/8 the edge H2D bytes/query of
+    # B=1 -- one window upload serves every query column
+    assert ratio <= 0.125, stbl["batched"]
+    emit("streaming.batched.bytes_per_query@B16",
+         f"{sb16['edge_bytes_per_query']:.3e}",
+         f"B1={sb1['edge_bytes_per_query']:.3e} ratio={ratio:.3f} "
+         "(<=0.125 enforced)")
+    emit("streaming.batched.qps@B16", f"{sb16['queries_per_sec']:.2f}",
+         f"B1={sb1['queries_per_sec']:.2f} queries/s through the streamed "
+         "run_batch plane")
+    pg_s = partition(load_dataset("soc-lj1-mini", scale_log2=scale,
+                                  weighted=True), 1, "grid(1,1)")
+    sm = kernelbench.streaming_cost_model(pg_s)
     emit("streaming.model.hiding", f"{sm['hiding']:.3f}",
          f"bound={sm['bound']} pipelined={sm['pipelined_superstep_s']:.2e}s "
          f"serialized={sm['serialized_superstep_s']:.2e}s")
     emit("streaming.model.crossover",
          f"{sm['crossover_intensity']:.0f}",
          f"flops/byte needed to hide the host link; layout sustains "
-         f"{sm['intensity_flops_per_byte']:.0f}")
-    cost_json["streaming"] = {**stbl, "model": sm}
+         f"{sm['intensity_flops_per_byte']:.0f} -> crossover at "
+         f"B={sm['crossover_batch']}")
+    smb = kernelbench.streaming_cost_model(pg_s, batch=16)
+    emit("streaming.model.batched_hiding", f"{smb['hiding']:.3f}",
+         f"B=16: compute per window scales 16x, copy unchanged; "
+         f"edge_bytes_per_query={smb['edge_bytes_per_query']:.3e} "
+         f"bound={smb['bound']}")
+    cost_json["streaming"] = {**stbl, "model": sm, "model_batched": smb}
 
     kernels_json = {
         "schema": 1,

@@ -753,19 +753,32 @@ class Engine:
 
     # -- streamed execution (residency='stream', DESIGN.md section 13) -------
 
-    def _stream_fns(self, program):
-        """Compile (once per program) the three jitted shard_map pieces of
-        the streamed superstep: ``prep`` (frontier-masked update -> vals),
-        ``win`` (fold ONE edge window's phase-1 contribution into the
-        running partial), ``apply`` (phase 2 + program apply + the
-        convergence/frontier summaries the host loop steers by).
+    def _stream_fns(self, program, B=None):
+        """Compile (once per program, and per B-bucket on the batched
+        plane) the three jitted shard_map pieces of the streamed superstep:
+        ``prep`` (frontier-masked update -> vals), ``win`` (fold ONE edge
+        window's phase-1 contribution into the running partial), ``apply``
+        (phase 2 + program apply + the convergence/frontier summaries the
+        host loop steers by).
+
+        ``B`` switches the bodies onto the batched [*, B] query plane
+        (DESIGN.md section 15): state/frontier/vals/partial carry a
+        trailing query axis, the window fold and phase 2 are
+        rank-polymorphic over it, and ``apply`` returns PER-QUERY
+        convergence counts ([B]) plus per-query frontier blocks
+        ([nsb, B]) so the host gate can take the union over live query
+        columns.  The compile key strips seed params exactly like the
+        resident batched cache (``_batch_key``): any source list of the
+        same bucket reuses the compilation.
 
         The win outputs double as the prefetcher's backpressure handles
         (``_StreamPrefetcher``), so the partial chain is NOT donated -- the
         accumulator recycling lives at the kernel level instead (the fused
         push's ``init=`` seed, ``kernels.ops.push``).
         """
-        key = (program.key, "stream")
+        batched = B is not None
+        key = ((self._batch_key(program, B), "stream") if batched
+               else (program.key, "stream"))
         fns = self._compiled.get(key)
         if fns is not None:
             return fns
@@ -776,14 +789,29 @@ class Engine:
         arr_specs = {k: P(AXIS, *([None] * (v.ndim - 1)))
                      for k, v in self.arrays.items()}
         vec = P(AXIS, None)
+        plane = P(AXIS, None, None) if batched else vec
         wd_specs = {"gr_src_local": vec, "gr_dst_col": vec,
                     "gr_edge_valid": vec, "gr_edge_weight": vec,
                     "gr_band": P(AXIS, None, None)}
         nsb = self._gate_nsb
+        has_qp = batched and program.query_plane is not None
+        qp_specs = (plane,) if has_qp else ()
+        fixed = program.fixed_iters is not None
 
-        def prep_body(aux, state, frontier):
-            aux = {k: v[0] for k, v in aux.items()}
-            if program.fixed_iters is not None:
+        def unpack_aux(aux, qp):
+            if not batched:
+                return {k: v[0] for k, v in aux.items()}
+            # per-vertex [K] planes broadcast over the batch axis as
+            # [K, 1]; the per-query operand is already [K, B] and merged
+            # after the expansion so programs read it at full rank
+            out = {k: v[0][:, None] for k, v in aux.items()}
+            if has_qp:
+                out["qplane"] = qp[0]
+            return out
+
+        def prep_body(aux, state, frontier, *qp):
+            aux = unpack_aux(aux, qp[0] if has_qp else None)
+            if fixed:
                 vals = program.update(state[0], aux)
             else:
                 sent = jnp.asarray(comb.identity, state.dtype)
@@ -800,16 +828,25 @@ class Engine:
                 grid_meta=self._grid_meta)
             return (out[None],)
 
-        def apply_body(arrs, aux, partial, state):
+        def apply_body(arrs, aux, partial, state, *qp):
             arrs = {k: v[0] for k, v in arrs.items()}
-            aux = {k: v[0] for k, v in aux.items()}
+            aux = unpack_aux(aux, qp[0] if has_qp else None)
             incoming = self._phase2(partial[0], arrs, comb)
             new = program.apply(state[0], incoming, aux)
             delta = new != state[0]
-            changed = jax.lax.psum(delta.any().astype(jnp.int32), AXIS) > 0
             # frontier collapsed to BLOCK_V granularity: the host-side gate
             # intersects it with each window's band source-block mask
             pad = nsb * blk.BLOCK_V - delta.shape[0]
+            if batched:
+                # per-query convergence across chares, and per-query
+                # frontier blocks for the union gate
+                changed = jax.lax.psum(
+                    delta.any(axis=0).astype(jnp.int32), AXIS)  # [B]
+                f = (jnp.pad(delta, ((0, pad), (0, 0))) if pad else delta)
+                fb = f.reshape(nsb, blk.BLOCK_V, f.shape[1]).any(axis=1)
+                return (new[None], delta.astype(jnp.int32)[None],
+                        changed[None], fb.astype(jnp.int32)[None])
+            changed = jax.lax.psum(delta.any().astype(jnp.int32), AXIS) > 0
             f = jnp.pad(delta, (0, pad)) if pad else delta
             fb = f.reshape(nsb, blk.BLOCK_V).any(axis=1)
             return (new[None], delta.astype(jnp.int32)[None],
@@ -819,17 +856,73 @@ class Engine:
         smap = functools.partial(compat.shard_map, mesh=self.mesh,
                                  check_vma=False)
         prep = jax.jit(smap(prep_body,
-                            in_specs=(aux_specs, vec, vec),
-                            out_specs=(vec,)))
+                            in_specs=(aux_specs, plane, plane) + qp_specs,
+                            out_specs=(plane,)))
         win = jax.jit(smap(win_body,
-                           in_specs=(wd_specs, vec, vec),
-                           out_specs=(vec,)))
-        apply_fn = jax.jit(smap(apply_body,
-                                in_specs=(arr_specs, aux_specs, vec, vec),
-                                out_specs=(vec, vec, vec, vec)))
+                           in_specs=(wd_specs, plane, plane),
+                           out_specs=(plane,)))
+        apply_fn = jax.jit(smap(
+            apply_body,
+            in_specs=(arr_specs, aux_specs, plane, plane) + qp_specs,
+            out_specs=(plane, plane, vec, plane if batched else vec)))
         fns = (prep, win, apply_fn)
         self._compiled[key] = fns
         return fns
+
+    _STREAM_SHARD_NAMES = ("gr_src_local", "gr_dst_col", "gr_edge_valid",
+                           "gr_edge_weight")
+
+    def _stream_shardings(self):
+        def shard(ndim):
+            return NamedSharding(self.mesh, P(AXIS, *([None] * (ndim - 1))))
+
+        out = {name: shard(2) for name in self._STREAM_SHARD_NAMES}
+        out["gr_band"] = shard(3)
+        return out
+
+    def _stream_sweep(self, pf, win, sched, active, vals, partial, outs):
+        """Walk one superstep's fetch schedule through the prefetcher,
+        folding each window into the running partial.  ``outs`` maps each
+        staging slot to the win output whose execution makes the slot safe
+        to reuse (the depth-2 backpressure handle)."""
+        if len(sched):
+            k0 = int(sched[0])
+            pf.submit(k0, active[:, k0], after=outs[pf.next_slot])
+            for i, k in enumerate(sched):
+                if i + 1 < len(sched):
+                    nxt = int(sched[i + 1])
+                    pf.submit(nxt, active[:, nxt],
+                              after=outs[pf.next_slot])
+                wd, slot = pf.take()
+                (partial,) = win(wd, vals, partial)
+                outs[slot] = pf.compute = partial
+        return partial
+
+    def _stream_record(self, pf, cfg, it, slots_total, slots_skipped,
+                       **extra):
+        """Publish one streamed run's prefetcher accounting into
+        ``self.dispatch['stream']`` and fold the window-slot counts into
+        the gate record."""
+        overlap = (1.0 - pf.stall_s / pf.copy_s) if pf.copy_s > 0 else 1.0
+        self.dispatch["stream"].update({
+            "supersteps": it,
+            "fetches": pf.fetches,
+            "fetched_bytes": pf.bytes_read,
+            "copy_s": pf.copy_s,
+            "stall_s": pf.stall_s,
+            "overlap_efficiency": max(0.0, min(1.0, overlap)),
+            "edge_bandwidth_bytes_per_s":
+                pf.bytes_read / pf.copy_s if pf.copy_s > 0 else 0.0,
+            "fetch_slots": slots_total,
+            "fetch_skipped": slots_skipped,
+            "fetch_skip_fraction":
+                slots_skipped / slots_total if slots_total else 0.0,
+            "pipelined": bool(cfg.prefetch),
+            **extra,
+        })
+        # window-granular slot accounting doubles as the gate record
+        self._gate_skipped += slots_skipped
+        self._gate_slots += slots_total
 
     def _run_streamed(self, program, gate) -> tuple[np.ndarray, int]:
         """The out-of-core superstep driver: per superstep, walk the edge
@@ -854,20 +947,14 @@ class Engine:
         _, cols, kc = self._grid_meta
         nw = sb.num_windows
         nsb = self._gate_nsb
-
-        def shard(ndim):
-            return NamedSharding(self.mesh, P(AXIS, *([None] * (ndim - 1))))
-
-        shardings = {"gr_src_local": shard(2), "gr_dst_col": shard(2),
-                     "gr_edge_valid": shard(2), "gr_edge_weight": shard(2),
-                     "gr_band": shard(3)}
         state = jnp.asarray(program.init(self.pg))
         frontier = jnp.ones((self._C, self._K), jnp.int32)
         fixed = program.fixed_iters is not None
         limit = program.fixed_iters if fixed else program.max_iters
         gate_masks = sb.gate_masks(nsb) if gate else None  # [P, nw, nsb]
         fb_host = np.ones((self._C, nsb), dtype=bool)
-        pf = _StreamPrefetcher(sb, shardings, pipelined=cfg.prefetch)
+        pf = _StreamPrefetcher(sb, self._stream_shardings(),
+                               pipelined=cfg.prefetch)
         it = 0
         changed = True
         slots_total = slots_skipped = 0
@@ -878,8 +965,7 @@ class Engine:
                 (vals,) = prep(self.aux, state, frontier)
                 pf.compute = vals
                 if gate_masks is not None:
-                    active = (gate_masks
-                              & fb_host[:, None, :]).any(axis=2)  # [P, nw]
+                    active = sb.active_windows(gate_masks, fb_host)
                 else:
                     active = np.ones((self._C, nw), dtype=bool)
                 sched = np.flatnonzero(active.any(axis=0))
@@ -887,17 +973,8 @@ class Engine:
                 slots_skipped += self._C * nw - int(active.sum())
                 partial = jnp.full((self._C, cols * kc), comb.identity,
                                    state.dtype)
-                if len(sched):
-                    k0 = int(sched[0])
-                    pf.submit(k0, active[:, k0], after=outs[pf.next_slot])
-                    for i, k in enumerate(sched):
-                        if i + 1 < len(sched):
-                            nxt = int(sched[i + 1])
-                            pf.submit(nxt, active[:, nxt],
-                                      after=outs[pf.next_slot])
-                        wd, slot = pf.take()
-                        (partial,) = win(wd, vals, partial)
-                        outs[slot] = pf.compute = partial
+                partial = self._stream_sweep(pf, win, sched, active, vals,
+                                             partial, outs)
                 state, delta, changed_dev, fb = apply_fn(
                     self.arrays, self.aux, partial, state)
                 pf.compute = state
@@ -909,27 +986,85 @@ class Engine:
                     fb_host = np.asarray(jax.device_get(fb)).astype(bool)
         finally:
             pf.close()
-        overlap = (1.0 - pf.stall_s / pf.copy_s) if pf.copy_s > 0 else 1.0
-        self.dispatch["stream"].update({
-            "supersteps": it,
-            "fetches": pf.fetches,
-            "fetched_bytes": pf.bytes_read,
-            "copy_s": pf.copy_s,
-            "stall_s": pf.stall_s,
-            "overlap_efficiency": max(0.0, min(1.0, overlap)),
-            "edge_bandwidth_bytes_per_s":
-                pf.bytes_read / pf.copy_s if pf.copy_s > 0 else 0.0,
-            "fetch_slots": slots_total,
-            "fetch_skipped": slots_skipped,
-            "fetch_skip_fraction":
-                slots_skipped / slots_total if slots_total else 0.0,
-            "pipelined": bool(cfg.prefetch),
-        })
-        # window-granular slot accounting doubles as the gate record
-        self._gate_skipped += slots_skipped
-        self._gate_slots += slots_total
+        self._stream_record(pf, cfg, it, slots_total, slots_skipped)
         final = np.asarray(jax.device_get(state)).reshape(-1)
         return final[self.pg.global_to_local], it
+
+    def _run_streamed_batch(self, program, B, state, frontier, qp, gate):
+        """Streamed twin of ``_run_batch_segment`` (DESIGN.md section 15):
+        the out-of-core window schedule over the batched [*, B] query
+        plane.  One prefetched edge-window upload serves ALL B query
+        columns of each window fold, so edge H2D bytes per query drop
+        B-fold against B single-query streamed runs.
+
+        Per-query convergence runs on the host exactly as the resident
+        batched ``while_loop`` runs on device: ``q_it[b]`` counts the
+        supersteps entered while query b's column was still active
+        (monotone non-increasing for min monoids), and the global loop
+        runs while ANY query is active -- so the per-query counts match
+        the resident plane (and a sequential run of each query) exactly.
+
+        Union-frontier gating: a (rectangle, window) slot is fetched iff
+        its band source blocks intersect the frontier of AT LEAST ONE
+        live query column (``ShardSource.active_windows`` over the
+        [P, nsb, B] block plane) -- sound because a skipped window is
+        provably dead for every query, and each fetch is shared by all.
+        Returns ``(state_device, q_it)``.
+        """
+        sb = self._source
+        cfg = self.stream or StreamConfig()
+        prep, win, apply_fn = self._stream_fns(program, B)
+        comb = program.combiner
+        _, cols, kc = self._grid_meta
+        nw = sb.num_windows
+        nsb = self._gate_nsb
+        fixed = program.fixed_iters is not None
+        limit = program.fixed_iters if fixed else program.max_iters
+        gate_masks = sb.gate_masks(nsb) if gate else None  # [P, nw, nsb]
+        fb_host = np.ones((self._C, nsb, B), dtype=bool)
+        active_q = np.ones(B, dtype=bool)
+        q_it = np.zeros(B, np.int64)
+        qp_args = () if qp is None else (qp,)
+        pf = _StreamPrefetcher(sb, self._stream_shardings(),
+                               pipelined=cfg.prefetch)
+        it = 0
+        slots_total = slots_skipped = 0
+        outs = {0: None, 1: None}
+        try:
+            while active_q.any() and it < limit:
+                (vals,) = prep(self.aux, state, frontier, *qp_args)
+                pf.compute = vals
+                if gate_masks is not None:
+                    # quiesced columns are already all-zero in fb_host; the
+                    # explicit mask documents the union-over-LIVE-queries
+                    # contract and keeps padding columns inert
+                    fb = fb_host & active_q[None, None, :]
+                    active = sb.active_windows(gate_masks, fb)
+                else:
+                    active = np.ones((self._C, nw), dtype=bool)
+                sched = np.flatnonzero(active.any(axis=0))
+                slots_total += self._C * nw
+                slots_skipped += self._C * nw - int(active.sum())
+                partial = jnp.full((self._C, cols * kc, B), comb.identity,
+                                   state.dtype)
+                partial = self._stream_sweep(pf, win, sched, active, vals,
+                                             partial, outs)
+                state, delta, changed_q, fb_dev = apply_fn(
+                    self.arrays, self.aux, partial, state, *qp_args)
+                pf.compute = state
+                q_it += active_q
+                it += 1
+                if fixed:
+                    continue  # every column runs the full counted loop
+                active_q = np.asarray(jax.device_get(changed_q))[0] > 0
+                frontier = delta
+                fb_host = np.asarray(jax.device_get(fb_dev)).astype(bool)
+        finally:
+            pf.close()
+        self._stream_record(
+            pf, cfg, it, slots_total, slots_skipped, batch=B,
+            fetched_bytes_per_query=pf.bytes_read / B)
+        return state, q_it
 
     # -- batched multi-query execution (DESIGN.md section 11) ----------------
 
@@ -1169,6 +1304,13 @@ class Engine:
         Padding columns re-run query 0 and are dropped on the way out.
         ``sync``/``gate`` relax the superstep barrier exactly as in ``run``.
 
+        On an ``Engine(residency='stream')`` the plane runs the out-of-core
+        window schedule (DESIGN.md section 15): each prefetched edge-window
+        upload is swept against all B query columns, so edge H2D bytes per
+        query drop B-fold (accounted in ``dispatch['stream']``); per-query
+        iteration counts and min-monoid values match the resident plane
+        bit-exactly.  ``replan`` and ``sync='overlap'`` stay resident-only.
+
         Returns ``(plane, iters)``: ``plane[i]`` is query i's converged
         per-vertex state in original vertex order ([n, V]), ``iters[i]``
         the supersteps query i needed (identical to its sequential count
@@ -1186,8 +1328,17 @@ class Engine:
                 f"program {program.name!r} has no batched init "
                 f"(VertexProgram.init_batch); run it with Engine.run")
         if self.residency == "stream":
-            raise ValueError("the batched query plane has no streamed "
-                             "schedule yet; use a resident Engine")
+            if replan is not None:
+                raise ValueError(
+                    "replan is a resident-path feature: the streamed "
+                    "schedule has no segment checkpoints to relabel at; "
+                    "run replan=... on an Engine(residency='resident') of "
+                    "the same graph, or drop it for the streamed schedule")
+            if sync != "barrier":
+                raise ValueError(
+                    "residency='stream' already pipelines H2D copies "
+                    "behind compute; run sync='overlap' on a resident "
+                    "Engine, or keep the default sync='barrier' here")
         sync, gate = self._validate_async(program, sync, gate)
         if sources is None:
             sources = program.sources
@@ -1211,7 +1362,10 @@ class Engine:
         limit = (program.fixed_iters if program.fixed_iters is not None
                  else program.max_iters)
         self._gate_skipped = self._gate_slots = 0
-        if replan is not None:
+        if self.residency == "stream":
+            state, q_it = self._run_streamed_batch(program, B, state,
+                                                   frontier, qp, gate)
+        elif replan is not None:
             state, q_it = self._run_batch_replanned(program, B, padded,
                                                     state, frontier, replan,
                                                     sync, gate, qp)
@@ -1427,21 +1581,28 @@ class Engine:
                     "this engine is bound resident; build it with "
                     "Engine(..., residency='stream') so the edge planes "
                     "are never uploaded in the first place")
-            if (program.sources is not None
-                    and program.init_batch is not None
-                    and program.finalize is not None):
-                raise ValueError(
-                    f"{program.name!r} runs on the batched query plane, "
-                    "which has no streamed schedule yet")
             if replan is not None:
                 raise ValueError(
                     "replan is a resident-path feature: the streamed "
-                    "schedule has no segment checkpoints to relabel at")
+                    "schedule has no segment checkpoints to relabel at; "
+                    "run replan=... on an Engine(residency='resident') of "
+                    "the same graph, or drop it for the streamed schedule")
             if sync != "barrier":
                 raise ValueError(
                     "residency='stream' already pipelines H2D copies "
-                    "behind compute; sync='overlap' is a resident-only "
-                    "relaxation")
+                    "behind compute; run sync='overlap' on a resident "
+                    "Engine, or keep the default sync='barrier' here")
+            if (program.sources is not None
+                    and program.init_batch is not None
+                    and program.finalize is not None):
+                # inherently multi-source programs ride the batched query
+                # plane, which streams too (DESIGN.md section 15): one
+                # edge-window upload serves every query column
+                sets = prog_mod.seed_sets(program.sources)
+                plane, q_it = self.run_batch(
+                    program, sources=program.sources, sync=sync, gate=gate)
+                return (program.finalize(self.pg.graph, sets, plane),
+                        int(q_it.max()))
             _, gate = self._validate_async(program, sync, gate)
             self._gate_skipped = self._gate_slots = 0
             out = self._run_streamed(program, gate)

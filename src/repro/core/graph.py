@@ -628,6 +628,28 @@ class ShardSource:
                 sub, num_src_blocks).astype(bool)
         return out
 
+    @staticmethod
+    def active_windows(gate_masks: np.ndarray,
+                       frontier_blocks: np.ndarray) -> np.ndarray:
+        """``[P, num_windows]`` bool fetch schedule: which (rectangle,
+        window) slots the live frontier can reach at all.
+
+        ``frontier_blocks`` is the engine's BLOCK_V-granular frontier
+        summary -- ``[P, nsb]`` for a single query, or ``[P, nsb, B]`` for
+        the batched plane, where a slot stays active iff ANY live query
+        column's frontier intersects its band source blocks (the
+        union-over-queries gate, DESIGN.md section 15).  The union is the
+        soundness condition for sharing one fetch across B folds: a window
+        may be skipped only when it is provably dead for EVERY query, and
+        a fetched window contributes the combiner identity to the columns
+        whose frontier misses it (frontier-masked vals), so no column ever
+        sees a neighbor's extra work.
+        """
+        fb = np.asarray(frontier_blocks)
+        if fb.ndim == 3:
+            fb = fb.any(axis=2)  # union over query columns
+        return (gate_masks & fb[:, None, :]).any(axis=2)
+
     def read_window(self, k: int, staging: dict,
                     active: np.ndarray | None = None) -> int:
         """Copy window ``k`` into the recycled ``staging`` slot; returns the

@@ -103,7 +103,7 @@ def _segment(combiner, segment_fn, data, seg_ids, num_segments):
 def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
                    combiner, num_chunks, chunk_size, segment_fn=None,
                    edge_value=None, push_fn=None, band=None,
-                   edge_semiring=None):
+                   edge_semiring=None, init=None):
     """Local per-destination combine into a dense [C*K] buffer.
 
     This is the aggregation loop of Listing 2's ``iterate()``; with the
@@ -123,6 +123,15 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
     staged path below -- never a silently different transform.
     Without a hook the pipeline runs as three jitted stages, optionally
     routing the segment half through ``segment_fn``.
+
+    ``init`` (optional, ``[C*K(, B)]``) seeds the destination accumulator
+    with a prior partial instead of the combiner identity -- the streamed
+    window schedule's fold contract (DESIGN.md section 13/15).  On the
+    fused-kernel path the seed rides the kernel's own ``init=`` operand
+    (one recycled VMEM accumulator across chained window sweeps, batched
+    planes included); the staged path folds it with the combiner's merge,
+    which is the same value (exactly for min, up to float association for
+    add).
     """
     if push_fn is not None and (edge_value is None or edge_semiring):
         unit = edge_semiring == "unit" and edge_value is not None
@@ -130,11 +139,12 @@ def _dense_contrib(vals, src_local, dst_global, edge_valid, edge_weight,
             and edge_value is not None else None
         return push_fn(vals, src_local, dst_global, edge_valid, weight,
                        num_chunks * chunk_size, combine=combiner.name,
-                       band=band, unit=unit)
+                       band=band, unit=unit, init=init)
     contrib = _edge_transform(vals[src_local], edge_weight, edge_value)
     contrib = combiner.mask(contrib, edge_valid)
-    return _segment(combiner, segment_fn, contrib, dst_global,
-                    num_chunks * chunk_size)
+    out = _segment(combiner, segment_fn, contrib, dst_global,
+                   num_chunks * chunk_size)
+    return out if init is None else combiner.merge(init, out)
 
 
 # --------------------------------------------------------------------------
@@ -313,13 +323,13 @@ def grid_groups(R, C):
 
 def grid2d_phase1(vals, pg_arrays, combiner, num_chunks, chunk_size,
                   segment_fn=None, edge_value=None, push_fn=None,
-                  edge_semiring=None, grid_meta=None):
+                  edge_semiring=None, grid_meta=None, init=None):
     R, C, Kc = grid_meta
     return _dense_contrib(vals, pg_arrays["gr_src_local"],
                           pg_arrays["gr_dst_col"], pg_arrays["gr_edge_valid"],
                           pg_arrays["gr_edge_weight"], combiner, C, Kc,
                           segment_fn, edge_value, push_fn,
-                          pg_arrays["gr_band"], edge_semiring)
+                          pg_arrays["gr_band"], edge_semiring, init=init)
 
 
 def grid2d_phase1_window(vals, window_arrays, partial, combiner, num_chunks,
@@ -331,16 +341,17 @@ def grid2d_phase1_window(vals, window_arrays, partial, combiner, num_chunks,
     ``window_arrays`` carries the same ``gr_*`` names as the resident grid
     layout, sliced to one BLOCK_E-aligned edge window, so the window body IS
     ``grid2d_phase1`` unchanged -- the streamed schedule only changes *when*
-    edges are on device, never what they compute.  Folding with the
-    combiner's merge is exact: each edge appears in exactly one window, so
-    min recovers the resident result bit for bit and add differs only in
-    float association order (same guarantee the two-phase reduce already
-    makes across rectangles).
+    edges are on device, never what they compute.  Folding through the
+    ``init=`` accumulator seed is exact: each edge appears in exactly one
+    window, so min recovers the resident result bit for bit and add differs
+    only in float association order (same guarantee the two-phase reduce
+    already makes across rectangles).  ``vals``/``partial`` may carry a
+    trailing [B] query axis (DESIGN.md section 15): the window's edge
+    upload is shared by all B columns of the fold.
     """
-    contrib = grid2d_phase1(vals, window_arrays, combiner, num_chunks,
-                            chunk_size, segment_fn, edge_value, push_fn,
-                            edge_semiring, grid_meta)
-    return combiner.merge(partial, contrib)
+    return grid2d_phase1(vals, window_arrays, combiner, num_chunks,
+                         chunk_size, segment_fn, edge_value, push_fn,
+                         edge_semiring, grid_meta, init=partial)
 
 
 def grid2d_phase2(dense, pg_arrays, combiner, num_chunks, chunk_size,

@@ -140,7 +140,12 @@ class DeadlinePolicy:
     arrival).  A group smaller than the plane width is HELD -- letting
     traffic fill the batch -- until its head's slack drops below
     ``slack_factor`` x one measured dispatch time (then waiting longer
-    would miss the deadline), or until ``force`` (the drain path).  Among
+    would miss the deadline), or until ``force`` (the drain path).
+    ``est_dispatch_s`` may be a plain float (one global estimate) or a
+    callable ``program -> seconds``: the server passes its measured
+    per-(program, B-bucket) EWMA, so the hold test prices the dispatch of
+    the group actually being held -- a cheap BFS group is no longer held
+    against an expensive PageRank budget or vice versa.  Among
     equally urgent groups the one dispatched last ranks behind the others,
     so steady mixed traffic alternates programs instead of letting a long
     stream starve the rest; with k live groups a group waits at most k-1
@@ -167,8 +172,9 @@ class DeadlinePolicy:
         members = sorted(members, key=lambda m: (m.slack(now), m.id))
         take = members[:batch]
         if len(take) < batch and not force:
-            if min(m.slack(now) for m in take) \
-                    > self.slack_factor * est_dispatch_s:
+            est = (est_dispatch_s(key[0]) if callable(est_dispatch_s)
+                   else est_dispatch_s)
+            if min(m.slack(now) for m in take) > self.slack_factor * est:
                 return []  # hold: the plane can still fill in time
         self._last_key = key
         return take
@@ -219,7 +225,11 @@ class GraphQueryServer:
         self.stats: dict[int, QueryStats] = {}
         self._next_id = 0
         self.dispatches = 0  # run_batch calls issued (admission diagnostics)
-        self.dispatch_time: float | None = None  # EWMA of measured wall s
+        self.dispatch_time: float | None = None  # global EWMA of measured s
+        # measured per-(program, B-bucket) dispatch budgets: the admission
+        # policy prices each group's hold against ITS program's EWMA, and
+        # tables.latency_table derives the SLO from the same record
+        self.dispatch_times: dict[tuple, float] = {}
         self.last_dispatch_s: float | None = None
 
     def submit(self, program: str, source, deadline: float | None = None,
@@ -243,6 +253,15 @@ class GraphQueryServer:
             deadline=None if deadline is None else now + float(deadline)))
         return rid
 
+    def est_dispatch(self, program: str) -> float:
+        """Measured dispatch-time estimate for ``program`` at this server's
+        B-bucket -- the per-(program, B) EWMA, falling back to the global
+        EWMA for a program not yet dispatched (and 0.0 cold, so a fresh
+        server never holds on a fictitious budget)."""
+        est = self.dispatch_times.get((program, self.batch),
+                                      self.dispatch_time)
+        return 0.0 if est is None else est
+
     def pending(self) -> int:
         return len(self._queue)
 
@@ -258,9 +277,8 @@ class GraphQueryServer:
         if not self._queue:
             return []
         now = self.clock()
-        est = self.dispatch_time if self.dispatch_time is not None else 0.0
         admitted = self.policy.select(tuple(self._queue), self.batch, now,
-                                      est, force)
+                                      self.est_dispatch, force)
         if not admitted:
             return []
         chosen = {r.id for r in admitted}
@@ -273,6 +291,10 @@ class GraphQueryServer:
         self.last_dispatch_s = dt
         self.dispatch_time = dt if self.dispatch_time is None \
             else 0.7 * self.dispatch_time + 0.3 * dt
+        pkey = (admitted[0].program, self.batch)
+        prev = self.dispatch_times.get(pkey)
+        self.dispatch_times[pkey] = dt if prev is None \
+            else 0.7 * prev + 0.3 * dt
         if hasattr(self.clock, "advance"):
             self.clock.advance(dt)
         done_t = self.clock()
@@ -308,9 +330,19 @@ class GraphQueryServer:
 
 def _graph_main(args):
     from repro.core import Engine, partition, rmat
+    from repro.core.engine import StreamConfig
 
     g = rmat(args.scale, 8 * (2 ** args.scale), seed=0, weighted=True)
-    eng = Engine(partition(g, 1))
+    residency = getattr(args, "residency", "resident")
+    if residency == "stream":
+        # out-of-core serving (DESIGN.md section 15): the edge planes never
+        # become device-resident; every dispatched batch sweeps each
+        # prefetched edge window once for all B admitted queries
+        eng = Engine(partition(g, 1, partitioner="grid(1,1)"),
+                     residency="stream",
+                     stream=StreamConfig(windows=getattr(args, "windows", 4)))
+    else:
+        eng = Engine(partition(g, 1))
     policy = DeadlinePolicy() if args.policy == "deadline" else GreedyPolicy()
     server = GraphQueryServer(eng, batch=args.batch, policy=policy)
     rng = np.random.default_rng(0)
@@ -373,6 +405,13 @@ def main():
                     help="per-query SLO in seconds (relative to submit)")
     ap.add_argument("--ppr-iters", type=int, default=10,
                     help="fixed iterations for personalized_pagerank traffic")
+    ap.add_argument("--residency", choices=("resident", "stream"),
+                    default="resident",
+                    help="graph residency for --graph serving: 'stream' "
+                         "serves out-of-core, sweeping each prefetched edge "
+                         "window once for all B admitted queries")
+    ap.add_argument("--windows", type=int, default=4,
+                    help="edge-window count for --residency=stream")
     args = ap.parse_args()
 
     if args.graph:

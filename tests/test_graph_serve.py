@@ -236,6 +236,59 @@ def test_deadline_policy_end_to_end_mixed_traffic():
 
 
 # ---------------------------------------------------------------------------
+# Measured SLO calibration (ISSUE 10): per-(program, B-bucket) dispatch EWMA
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_times_recorded_per_program_bucket():
+    """Each dispatched program gets its own (program, B) EWMA entry next
+    to the global estimate, and ``est_dispatch`` prefers it."""
+    _, server = _server(batch=2, algo="personalized_pagerank")
+    for i in range(2):
+        server.submit("bfs", i + 1)
+        server.submit("personalized_pagerank", (i + 1,), iters=3)
+    server.drain()
+    assert set(server.dispatch_times) == {("bfs", 2),
+                                          ("personalized_pagerank", 2)}
+    for prog in ("bfs", "personalized_pagerank"):
+        assert server.est_dispatch(prog) == server.dispatch_times[(prog, 2)]
+        assert server.est_dispatch(prog) > 0.0
+
+
+def test_est_dispatch_fallbacks():
+    """A program never dispatched falls back to the global EWMA; a fully
+    cold server reports 0.0 so a fresh queue is never held against a
+    fictitious budget."""
+    _, server = _server(batch=2)
+    assert server.est_dispatch("bfs") == 0.0  # cold: no estimate at all
+    server.submit("sssp", 1)
+    server.submit("sssp", 2)
+    server.drain()
+    assert server.est_dispatch("sssp") == server.dispatch_times[("sssp", 2)]
+    assert server.est_dispatch("bfs") == server.dispatch_time  # global fall
+
+
+def test_deadline_policy_prices_per_program_estimate():
+    """The hold test resolves a callable est_dispatch_s with the group
+    being held: a cheap program dispatches on its own small budget while
+    an expensive one is still held (same queue shape, same deadlines)."""
+    pol = DeadlinePolicy()
+    est = {"bfs": 0.01, "personalized_pagerank": 5.0}.get
+    cheap = (_req(0, "bfs", deadline=10.0),)
+    # slack 10 >> 0.01: held to let the plane fill
+    assert pol.select(cheap, 4, now=0.0, est_dispatch_s=lambda p: est(p),
+                      force=False) == []
+    costly = (_req(1, "personalized_pagerank", deadline=10.0),)
+    # the SAME slack is inside the expensive program's 5s budget: dispatch
+    got = pol.select(costly, 4, now=6.0, est_dispatch_s=lambda p: est(p),
+                     force=False)
+    assert [r.id for r in got] == [1]
+    # floats still work (one global estimate, the pre-calibration contract)
+    assert pol.select(cheap, 4, now=0.0, est_dispatch_s=0.1,
+                      force=False) == []
+
+
+# ---------------------------------------------------------------------------
 # Bugfix regressions (each fails on the pre-PR serving path)
 # ---------------------------------------------------------------------------
 

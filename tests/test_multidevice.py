@@ -363,14 +363,19 @@ from repro.core import Engine, StreamConfig, partition, random_weights, rmat
 RESIDENCY = os.environ.get("REPRO_RESIDENCY", "stream")
 
 results = {"residency": RESIDENCY, "stream_cells": 0, "stream_exact_ok": True,
-           "stream_iters_ok": True, "accounting_ok": True}
+           "stream_iters_ok": True, "accounting_ok": True,
+           "batch_cells": 0, "batch_exact_ok": True, "batch_iters_ok": True,
+           "batch_bytes_ok": True}
 g = random_weights(rmat(10, 6000, seed=3), seed=5)
 cache = tempfile.mkdtemp(prefix="layout_cache_")
+batch_sources = [7, 100, 3, 250, 9]  # 5 sources into B=8: padding columns
 skip_max = 0.0
 
 for shape, pes in (("grid(1,2)", 2), ("grid(2,4)", 8)):
     pg = partition(g, pes, shape)
     refs = {prog: Engine(pg).run(prog, source=7) for prog in ("sssp", "bfs")}
+    brefs = {prog: Engine(pg).run_batch(prog, sources=batch_sources, batch=8)
+             for prog in ("sssp", "bfs")}
     if RESIDENCY != "stream":
         continue
     eng = Engine(partition(g, pes, shape, eager=False), residency="stream",
@@ -392,6 +397,21 @@ for shape, pes in (("grid(1,2)", 2), ("grid(2,4)", 8)):
                 and st["supersteps"] == it)
             if gate:
                 skip_max = max(skip_max, st["fetch_skip_fraction"])
+    # batched [*, 8] plane over the same streamed schedule (ISSUE 10):
+    # bit-exact values AND per-query iteration counts vs the resident
+    # batched plane, one window upload serving all 8 columns
+    for prog, (ref, ref_it) in brefs.items():
+        got, it = eng.run_batch(prog, sources=batch_sources, batch=8)
+        results["batch_cells"] += 1
+        results["batch_exact_ok"] &= bool(
+            np.array_equal(np.asarray(got), np.asarray(ref)))
+        results["batch_iters_ok"] &= bool(
+            np.array_equal(np.asarray(it), np.asarray(ref_it)))
+        st = eng.dispatch["stream"]
+        results["batch_bytes_ok"] &= bool(
+            st["batch"] == 8
+            and st["fetched_bytes_per_query"] == st["fetched_bytes"] / 8
+            and st["supersteps"] == int(np.asarray(it).max()))
 
 if RESIDENCY == "stream":
     results["gate_skip_max"] = skip_max
@@ -566,6 +586,10 @@ def test_stream_multidevice():
     assert res["stream_exact_ok"]
     assert res["stream_iters_ok"]
     assert res["accounting_ok"]
+    assert res["batch_cells"] == 4  # 2 shapes x 2 programs, batched B=8
+    assert res["batch_exact_ok"]
+    assert res["batch_iters_ok"]
+    assert res["batch_bytes_ok"]
     assert res["gate_skip_max"] > 0  # multi-rect grids must gate fetches
     assert res["warm_origin"] == "disk"
     assert res["warm_exact"]
